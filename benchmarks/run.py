@@ -1,0 +1,203 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Outputs ``name,us_per_call,derived`` CSV rows:
+  table1_*   — paper Table I: per-step resource summary of the CONNECT
+               workflow (time per step; derived = data bytes processed).
+  fig3_*     — paper Figs 3-4: queue-fed download job, worker scaling
+               (derived = MB/s aggregate throughput).
+  fig5_*     — paper Fig 5: FFN training step (derived = voxels/s).
+  fig6_*     — paper Fig 6: distributed inference worker scaling
+               (derived = voxels/s; speedup printed vs 1 worker).
+  lm_train_* — LM substrate: one sharded train step on the smoke config
+               (derived = tokens/s).
+  serve_*    — serving: prefill latency + decode steps/s.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+
+def bench_connect_workflow(fast: bool):
+    """Table I + the 4-step CONNECT workflow, measured end to end."""
+    from repro.apps.connect.pipeline import ConnectConfig, run_connect_workflow
+    from repro.data.volumes import VolumeSpec
+    from repro.models.ffn3d import FFNConfig
+
+    cc = ConnectConfig(
+        n_chunks=2, download_workers=2, inference_workers=2,
+        vol=VolumeSpec(lat=48, lon=72, frames=16, events=2),
+        ffn=FFNConfig(depth=3, width=12, fov=(8, 16, 16), flood_iters=2),
+        train_steps=10 if fast else 30)
+    with tempfile.TemporaryDirectory() as d:
+        wf, results = run_connect_workflow(d, cc)
+    for rep in wf.reports:
+        row(f"table1_{rep.step}", rep.total_time_s * 1e6,
+            f"bytes={rep.data_processed_bytes}")
+    return results
+
+
+def bench_queue_scaling(fast: bool):
+    """Figs 3-4: download throughput vs worker count (work-queue scaling)."""
+    from repro.core.queue import WorkQueue, run_workers
+    from repro.data import volumes
+    from repro.data.objectstore import ObjectStore
+
+    spec = volumes.VolumeSpec(lat=48, lon=72, frames=8, events=1)
+    n_chunks = 4 if fast else 8
+    for workers in (1, 2, 4):
+        with tempfile.TemporaryDirectory() as d:
+            store = ObjectStore(d)
+            q = WorkQueue(list(range(n_chunks)))
+            nbytes = {"n": 0}
+
+            def fetch(cid):
+                ivt, lab = volumes.generate_chunk(spec, cid)
+                nbytes["n"] += store.put_array(f"c{cid}/ivt.npy", ivt)
+                nbytes["n"] += store.put_array(f"c{cid}/lab.npy", lab)
+
+            t0 = time.perf_counter()
+            run_workers(q, fetch, workers)
+            dt = time.perf_counter() - t0
+        row(f"fig3_download_w{workers}", dt / n_chunks * 1e6,
+            f"MBps={nbytes['n'] / 2**20 / dt:.1f}")
+
+
+def bench_ffn_train(fast: bool):
+    """Fig 5: FFN 3-D CNN training step."""
+    from repro.models import ffn3d
+    from repro.models.params import init_params
+
+    cfg = ffn3d.FFNConfig(depth=3, width=12, fov=(8, 16, 16))
+    params = init_params(ffn3d.ffn_schema(cfg), jax.random.key(0), "float32")
+    B = 4
+    x = jax.random.uniform(jax.random.key(1), (B,) + cfg.fov)
+    y = (x > 0.6).astype(jnp.float32)
+
+    @jax.jit
+    def step(p, x, y):
+        loss, g = jax.value_and_grad(
+            lambda p: ffn3d.bce_loss(cfg, p, x, y))(p)
+        return jax.tree.map(lambda a, b: a - 1e-3 * b, p, g), loss
+
+    params, _ = step(params, x, y)          # compile
+    n = 3 if fast else 10
+    t0 = time.perf_counter()
+    for _ in range(n):
+        params, loss = step(params, x, y)
+    jax.block_until_ready(loss)
+    dt = (time.perf_counter() - t0) / n
+    vox = B * int(np.prod(cfg.fov))
+    row("fig5_ffn_train_step", dt * 1e6, f"voxels_s={vox / dt:.0f}")
+
+
+def bench_inference_scaling(fast: bool):
+    """Fig 6 / §III-C: flood-fill inference scaling with worker count."""
+    from repro.core.queue import WorkQueue, run_workers
+    from repro.models import ffn3d
+    from repro.models.params import init_params
+
+    cfg = ffn3d.FFNConfig(depth=3, width=12, fov=(8, 16, 16), flood_iters=2)
+    params = init_params(ffn3d.ffn_schema(cfg), jax.random.key(0), "float32")
+
+    @jax.jit
+    def infer(x):
+        return jax.nn.sigmoid(ffn3d.flood_fill(cfg, params, x)) > 0.5
+
+    tile = jax.random.uniform(jax.random.key(1), (4,) + cfg.fov)
+    np.asarray(infer(tile))                 # compile once
+    n_tiles = 8 if fast else 16
+    base = None
+    for workers in (1, 2, 4):
+        q = WorkQueue(list(range(n_tiles)))
+        t0 = time.perf_counter()
+        run_workers(q, lambda i: np.asarray(infer(tile)).sum(), workers)
+        dt = time.perf_counter() - t0
+        vox = n_tiles * tile.size
+        if base is None:
+            base = dt
+        row(f"fig6_inference_w{workers}", dt / n_tiles * 1e6,
+            f"voxels_s={vox / dt:.0f};speedup={base / dt:.2f}")
+
+
+def bench_lm_train(fast: bool):
+    """LM substrate: sharded train step on the reduced phi4 config."""
+    from repro.configs import registry
+    from repro.configs.base import OptimizerConfig, ShapeConfig
+    from repro.launch.mesh import single_device_mesh
+    from repro.models import params as pr
+    from repro.optim import adamw
+    from repro.runtime import steps as steps_mod
+
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    shape = ShapeConfig("b", 128, 4, "train")
+    mesh = single_device_mesh()
+    ocfg = OptimizerConfig(warmup_steps=2, decay_steps=100)
+    bundle = steps_mod.build_train(cfg, registry.get_parallel("phi4-mini-3.8b"),
+                                   ocfg, mesh, shape)
+    mod = steps_mod._model_module(cfg)
+    schema = mod.lm_schema(cfg)
+    params = pr.init_params(schema, jax.random.key(0), cfg.param_dtype)
+    opt = pr.init_params(adamw.opt_state_schema(schema, ocfg),
+                         jax.random.key(1), "float32")
+    batch = {"tokens": jnp.ones((4, 128), jnp.int32),
+             "labels": jnp.ones((4, 128), jnp.int32)}
+    with mesh:
+        step = bundle.jit()
+        params, opt, m = step(params, opt, batch)   # compile
+        n = 3 if fast else 10
+        t0 = time.perf_counter()
+        for _ in range(n):
+            params, opt, m = step(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / n
+    row("lm_train_step_smoke", dt * 1e6, f"tokens_s={4 * 128 / dt:.0f}")
+
+
+def bench_serve(fast: bool):
+    """Serving: prefill latency and decode throughput (smoke config)."""
+    from repro.launch.serve import serve
+
+    t0 = time.perf_counter()
+    results, metrics = serve("phi4-mini-3.8b", smoke=True,
+                             n_requests=4, prompt_len=16,
+                             gen=4 if fast else 8, batch=2)
+    dt = time.perf_counter() - t0
+    scr = metrics.scrape()
+    row("serve_prefill", scr.get("serve/prefill_s", 0) * 1e6,
+        f"decode_tok_s={scr.get('serve/decode_tok_s', 0):.0f}")
+    row("serve_end_to_end", dt * 1e6, f"requests={len(results)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    bench_connect_workflow(args.fast)
+    bench_queue_scaling(args.fast)
+    bench_ffn_train(args.fast)
+    bench_inference_scaling(args.fast)
+    bench_lm_train(args.fast)
+    bench_serve(args.fast)
+    print(f"\n# {len(ROWS)} benchmark rows")
+
+
+if __name__ == "__main__":
+    main()

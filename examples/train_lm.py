@@ -1,0 +1,56 @@
+"""End-to-end LM training driver: a ~100M-param decoder LM for a few hundred
+steps on the synthetic token pipeline, with checkpoints and auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py                # ~20M, CPU-sized
+    PYTHONPATH=src python examples/train_lm.py --hundred-m    # ~100M config
+    PYTHONPATH=src python examples/train_lm.py --resume-demo  # crash+resume
+
+The --hundred-m config is the deliverable's "train ~100M model for a few
+hundred steps" driver; on one CPU core it is slow (use a real accelerator),
+so the default is a same-shape smaller model that finishes in minutes.
+"""
+import argparse
+import tempfile
+
+from repro.configs.base import ModelConfig
+from repro.launch.train import train
+
+
+def lm_config(hundred_m: bool) -> ModelConfig:
+    if hundred_m:
+        # ~110M params: 12L, d=768, ff=2048, vocab=32768
+        return ModelConfig(name="lm-100m", family="dense", num_layers=12,
+                           d_model=768, num_heads=12, num_kv_heads=4,
+                           d_ff=2048, vocab_size=32_768, head_dim=64)
+    return ModelConfig(name="lm-20m", family="dense", num_layers=6,
+                       d_model=320, num_heads=8, num_kv_heads=4,
+                       d_ff=896, vocab_size=16_384, head_dim=40)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--resume-demo", action="store_true")
+    args = ap.parse_args()
+
+    cfg = lm_config(args.hundred_m)
+    steps = args.steps or (300 if not args.hundred_m else 200)
+    ckpt_dir = tempfile.mkdtemp(prefix="lm-ckpt-")
+    kw = dict(steps=steps, seq=64, batch=4, smoke=False, ckpt_dir=ckpt_dir,
+              ckpt_every=25, cfg_override=cfg)
+
+    if args.resume_demo:
+        try:
+            train(cfg.name, fail_at=min(45, steps // 2), **kw)
+        except RuntimeError as e:
+            print(f"[demo] crashed as injected: {e}")
+        print("[demo] restarting — auto-resume from latest checkpoint")
+    out = train(cfg.name, **kw)
+    losses = out["losses"]
+    print(f"final: first-loss {losses[0]:.3f} last-loss {losses[-1]:.3f}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

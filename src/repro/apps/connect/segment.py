@@ -1,0 +1,89 @@
+"""CONNECT — connected-object labeling in time+space (paper §III, refs
+[21][22][23]).
+
+CONNECT's insight: earth-science phenomena must be tracked through their
+whole life-cycle by connecting pixels in BOTH space and time.  That is 3-D
+connected-component labeling over (T, lat, lon) masks with 6-connectivity
+(the T links give the life-cycle).
+
+Hardware adaptation (DESIGN.md §2): classic union-find is pointer-chasing
+and hostile to TPUs; we use iterative min-label propagation — each voxel
+takes the min label of its masked neighbors until fixpoint — expressed as a
+``lax.while_loop`` of vectorized shifts: O(diameter) passes of pure
+elementwise ops, which is the TPU-idiomatic equivalent.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BIG = jnp.int32(2 ** 30)
+
+
+def _neighbor_min(lbl: jnp.ndarray) -> jnp.ndarray:
+    """Min over the 6-neighborhood (T, Y, X), edge-padded with _BIG."""
+    out = lbl
+    for axis in range(3):
+        fwd = jnp.concatenate(
+            [jax.lax.slice_in_dim(lbl, 1, lbl.shape[axis], axis=axis),
+             jnp.full_like(jax.lax.slice_in_dim(lbl, 0, 1, axis=axis), _BIG)],
+            axis=axis)
+        bwd = jnp.concatenate(
+            [jnp.full_like(jax.lax.slice_in_dim(lbl, 0, 1, axis=axis), _BIG),
+             jax.lax.slice_in_dim(lbl, 0, lbl.shape[axis] - 1, axis=axis)],
+            axis=axis)
+        out = jnp.minimum(out, jnp.minimum(fwd, bwd))
+    return out
+
+
+@jax.jit
+def connect_label(mask: jnp.ndarray) -> jnp.ndarray:
+    """Label connected objects of a binary (T, Y, X) mask.
+
+    Returns int32 labels: 0 = background, else the (flat-index+1) of the
+    object's minimal voxel — stable, order-independent ids.
+    """
+    mask = mask.astype(bool)
+    n = mask.size
+    init = jnp.where(mask,
+                     jnp.arange(1, n + 1, dtype=jnp.int32).reshape(mask.shape),
+                     _BIG)
+
+    def cond(state):
+        lbl, changed = state
+        return changed
+
+    def body(state):
+        lbl, _ = state
+        new = jnp.where(mask, jnp.minimum(lbl, _neighbor_min(lbl)), _BIG)
+        return new, jnp.any(new != lbl)
+
+    lbl, _ = jax.lax.while_loop(cond, body, (init, jnp.bool_(True)))
+    return jnp.where(mask, lbl, 0)
+
+
+def object_stats(labels: np.ndarray) -> List[Dict]:
+    """Life-cycle statistics per object (host-side post-processing, paper
+    Step 4): voxels, genesis/termination frame, duration, centroid drift."""
+    labels = np.asarray(labels)
+    out = []
+    for obj in np.unique(labels):
+        if obj == 0:
+            continue
+        t, y, x = np.nonzero(labels == obj)
+        out.append({
+            "id": int(obj),
+            "voxels": int(t.size),
+            "genesis_frame": int(t.min()),
+            "termination_frame": int(t.max()),
+            "duration": int(t.max() - t.min() + 1),
+            "centroid": (float(y.mean()), float(x.mean())),
+            "drift": float(np.hypot(y[t == t.max()].mean() -
+                                    y[t == t.min()].mean(),
+                                    x[t == t.max()].mean() -
+                                    x[t == t.min()].mean())),
+        })
+    return sorted(out, key=lambda d: -d["voxels"])

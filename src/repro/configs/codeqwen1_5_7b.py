@@ -1,0 +1,20 @@
+"""codeqwen1.5-7b [dense] — qwen1.5 arch (qkv bias) [hf:Qwen/CodeQwen1.5-7B]."""
+from repro.configs.base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    d_ff=13_440, vocab_size=92_416, head_dim=128,
+    block_pattern=("attn",),
+    attn=AttnConfig(rope_theta=1_000_000.0, qkv_bias=True),
+    tie_embeddings=False,
+)
+
+# §Perf (beyond-paper): pure-FSDP training layout — batch over all 256
+# chips, ZeRO-3 weights over (data, model), no TP.  Measured on codeqwen
+# train_4k: collective bytes 150 -> 11.3 GB/chip (bf16-adj), temp 11.6 ->
+# 7.2 GiB, roofline fraction 0.18 -> ~0.69.  Serving shapes keep the
+# hybrid FSDP x TP layout (KV cache wants the model axis).
+from repro.configs.base import ParallelConfig  # noqa: E402
+
+PARALLEL = ParallelConfig(pure_fsdp_train=True)

@@ -1,0 +1,23 @@
+"""gemma2-9b [dense] — local+global alternating, logit softcaps
+[arXiv:2408.00118; hf]."""
+from repro.configs.base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b", family="dense",
+    num_layers=42, d_model=3584, num_heads=16, num_kv_heads=8,
+    d_ff=14_336, vocab_size=256_000, head_dim=256,
+    block_pattern=("local", "global"),
+    attn=AttnConfig(rope_theta=10_000.0, window=4096, logit_softcap=50.0),
+    post_norm=True, embed_scale=True,
+    final_logit_softcap=30.0,
+    tie_embeddings=True,
+)
+
+# §Perf (beyond-paper): pure-FSDP training layout — batch over all 256
+# chips, ZeRO-3 weights over (data, model), no TP.  Measured on codeqwen
+# train_4k: collective bytes 150 -> 11.3 GB/chip (bf16-adj), temp 11.6 ->
+# 7.2 GiB, roofline fraction 0.18 -> ~0.69.  Serving shapes keep the
+# hybrid FSDP x TP layout (KV cache wants the model axis).
+from repro.configs.base import ParallelConfig  # noqa: E402
+
+PARALLEL = ParallelConfig(pure_fsdp_train=True)

@@ -1,0 +1,73 @@
+"""``--arch <id>`` registry: the 10 assigned architectures + the paper's own
+FFN/CONNECT case-study model.  Each module exports CONFIG (ModelConfig) and
+optionally OPTIMIZER / PARALLEL overrides (1T-scale memory recipes)."""
+from __future__ import annotations
+
+import importlib
+from typing import Optional, Tuple
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ParallelConfig,
+                                SHAPES, LONG_CONTEXT_ARCHS, ShapeConfig,
+                                smoke_config)
+
+ARCHS: Tuple[str, ...] = (
+    "phi4-mini-3.8b",
+    "codeqwen1.5-7b",
+    "deepseek-7b",
+    "gemma2-9b",
+    "granite-moe-1b-a400m",
+    "kimi-k2-1t-a32b",
+    "zamba2-2.7b",
+    "whisper-small",
+    "rwkv6-1.6b",
+    "llama-3.2-vision-90b",
+)
+
+_MODULES = {
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "deepseek-7b": "deepseek_7b",
+    "gemma2-9b": "gemma2_9b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "whisper-small": "whisper_small",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "ffn-connect": "ffn_connect",
+}
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_optimizer(arch: str) -> OptimizerConfig:
+    return getattr(_module(arch), "OPTIMIZER", OptimizerConfig())
+
+
+def get_parallel(arch: str) -> ParallelConfig:
+    return getattr(_module(arch), "PARALLEL", ParallelConfig())
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return smoke_config(get_config(arch))
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch, shape) dry-run cells, honoring the long_500k rule."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES.values():
+            skipped = (shape.name == "long_500k"
+                       and arch not in LONG_CONTEXT_ARCHS)
+            if skipped and not include_skipped:
+                continue
+            out.append((arch, shape, skipped))
+    return out

@@ -1,0 +1,27 @@
+"""rwkv6-1.6b (Finch) [ssm] — attention-free, data-dependent decay
+[arXiv:2404.05892; unverified]."""
+from repro.configs.base import AttnConfig, ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    num_layers=24, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=7168, vocab_size=65_536, head_dim=64,
+    block_pattern=("rwkv",),
+    attn=AttnConfig(use_rope=False),
+    rwkv=RWKVConfig(head_dim=64, chunk=64),
+    tie_embeddings=True,
+)
+
+# §Perf note: sequence_parallel=False was tried for the recurrent
+# archs (seq cannot shard) and REFUTED — collectives worsened (rwkv 10x:
+# full-seq replicated residuals make backward dgrad ARs full-size) and
+# memory grew (full-seq residual checkpoints).  See EXPERIMENTS §Perf.
+
+# §Perf (beyond-paper, CONFIRMED): pure-FSDP training layout — measured
+# zamba2: collectives 224 -> 16.6 GB/chip raw (5.5 bf16-adj), temp 21 ->
+# 8.2 GiB; rwkv6: 93 -> 8.7 GB raw, temp 5.5 -> 1.9 GiB.  The recurrent
+# blocks cannot shard seq, so removing inner-dim TP removes their
+# partial-sum ARs entirely; batch covers the full mesh instead.
+from repro.configs.base import ParallelConfig  # noqa: E402
+
+PARALLEL = ParallelConfig(pure_fsdp_train=True)

@@ -1,0 +1,69 @@
+"""Elastic scaling — nodes join/leave, the mesh reshapes, training resumes.
+
+CHASE-CI §V: "nodes can join and leave the cluster at any time ... if a node
+is taken offline the pods on that node will be rescheduled on another node".
+For SPMD training the equivalent is: when the device set changes, build a
+new mesh (shrinking/growing the data axis, never the model axis — TP/EP
+layouts are weight-structural), re-shard the training state onto it (via the
+checkpointer, which is mesh-agnostic), rescale the per-step batch, and keep
+going.  A lost node therefore costs one checkpoint restore, not a job.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class RescalePlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    devices_used: int
+    devices_idle: int
+
+    @property
+    def data_parallel_change(self) -> float:
+        i = self.axes.index("data")
+        return self.new_shape[i] / self.old_shape[i]
+
+
+def rescale_plan(axes: Tuple[str, ...], old_shape: Tuple[int, ...],
+                 n_devices: int) -> RescalePlan:
+    """Largest mesh for `n_devices` keeping every non-data axis fixed.
+
+    The data axis absorbs the change (standard elastic-DP policy); if fewer
+    devices than one model replica exist, raise — that cluster cannot host
+    the model at all.
+    """
+    i = axes.index("data")
+    fixed = int(np.prod([s for j, s in enumerate(old_shape) if j != i]))
+    if n_devices < fixed:
+        raise RuntimeError(
+            f"{n_devices} devices < one model replica ({fixed})")
+    new_data = n_devices // fixed
+    # keep power-of-two data axis for even batch sharding
+    new_data = 1 << (new_data.bit_length() - 1)
+    new_shape = tuple(new_data if j == i else s
+                      for j, s in enumerate(old_shape))
+    used = fixed * new_data
+    return RescalePlan(tuple(old_shape), new_shape, tuple(axes),
+                       used, n_devices - used)
+
+
+def make_elastic_mesh(plan: RescalePlan,
+                      devices: Optional[List] = None) -> Mesh:
+    devs = devices if devices is not None else jax.devices()
+    n = int(np.prod(plan.new_shape))
+    arr = np.array(devs[:n]).reshape(plan.new_shape)
+    return Mesh(arr, plan.axes)
+
+
+def reshard(tree, shardings):
+    """Direct in-memory resharding (same process, live devices)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -1,0 +1,114 @@
+"""Measurement layer — the Prometheus/Grafana analogue.
+
+The paper's methodology is "constantly measuring, learning, and informing
+every aspect of a machine learning workflow" (CHASE-CI §VI, Figs 3-6,
+Table I).  This registry provides counters / gauges / histograms plus
+timestamped series, and renders the paper's Table I (per-step resource
+summary) from StepReports.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class Series:
+    points: List[Tuple[float, float]] = field(default_factory=list)
+
+    def record(self, value: float, ts: Optional[float] = None):
+        self.points.append((time.time() if ts is None else ts, float(value)))
+
+    @property
+    def last(self) -> float:
+        return self.points[-1][1] if self.points else 0.0
+
+    @property
+    def total(self) -> float:
+        return sum(v for _, v in self.points)
+
+    @property
+    def mean(self) -> float:
+        return self.total / len(self.points) if self.points else 0.0
+
+    @property
+    def max(self) -> float:
+        return max((v for _, v in self.points), default=0.0)
+
+
+class Registry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._series: Dict[str, Series] = {}
+
+    def series(self, name: str) -> Series:
+        with self._lock:
+            return self._series.setdefault(name, Series())
+
+    def inc(self, name: str, value: float = 1.0):
+        self.series(name).record(value)
+
+    def gauge(self, name: str, value: float):
+        self.series(name).record(value)
+
+    @contextmanager
+    def timer(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.series(name).record(time.perf_counter() - t0)
+
+    def scrape(self) -> Dict[str, float]:
+        with self._lock:
+            return {k: s.last for k, s in self._series.items()}
+
+    def to_csv(self) -> str:
+        lines = ["metric,count,last,mean,max,total"]
+        with self._lock:
+            for k in sorted(self._series):
+                s = self._series[k]
+                lines.append(f"{k},{len(s.points)},{s.last:.6g},{s.mean:.6g},"
+                             f"{s.max:.6g},{s.total:.6g}")
+        return "\n".join(lines)
+
+
+@dataclass
+class StepReport:
+    """One column of the paper's Table I."""
+    step: str
+    pods: int = 0
+    cpus: int = 0
+    devices: int = 0          # "# of GPUs" in the paper
+    data_processed_bytes: int = 0
+    memory_bytes: int = 0
+    total_time_s: float = 0.0
+    extra: Dict[str, float] = field(default_factory=dict)
+
+
+def table_one(reports: List[StepReport]) -> str:
+    """Render the paper's Table I (Nautilus resource summary) as markdown."""
+    def fmt_bytes(b):
+        for unit in ("B", "KB", "MB", "GB", "TB"):
+            if abs(b) < 1024:
+                return f"{b:.1f}{unit}"
+            b /= 1024
+        return f"{b:.1f}PB"
+
+    head = "| | " + " | ".join(r.step for r in reports) + " |"
+    sep = "|---" * (len(reports) + 1) + "|"
+    rows = [
+        ("# of Pods", [str(r.pods) for r in reports]),
+        ("# of CPUs", [str(r.cpus) for r in reports]),
+        ("# of Devices", [str(r.devices) for r in reports]),
+        ("Data Processed", [fmt_bytes(r.data_processed_bytes) for r in reports]),
+        ("Memory", [fmt_bytes(r.memory_bytes) for r in reports]),
+        ("Total Time", [f"{r.total_time_s:.1f}s" for r in reports]),
+    ]
+    out = [head, sep]
+    for name, vals in rows:
+        out.append("| " + name + " | " + " | ".join(vals) + " |")
+    return "\n".join(out)

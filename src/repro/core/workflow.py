@@ -1,0 +1,162 @@
+"""Workflow engine — the paper's step-by-step, measured, resumable workflows.
+
+CHASE-CI's CONNECT workflow (§III) is four steps (download -> train ->
+distributed inference -> visualization), each a Kubernetes Job that is
+independently testable, measured in Grafana, and restartable.  The PPoDS
+methodology (§VI) demands: separable steps, per-step measurement, and
+development of steps in isolation.
+
+Here a ``Workflow`` is a DAG of ``Step``s executed on a ``Cluster``:
+  * each step runs as an orchestrator Job (pods = threads, devices = mesh
+    slices) and its wall-time / bytes / resource footprint is recorded as a
+    StepReport — Table I of the paper falls out of ``wf.table_one()``;
+  * steps persist a completion marker + output manifest to the ObjectStore
+    (the Ceph analogue), so a crashed / restarted workflow resumes from the
+    last completed step (fault tolerance at the workflow level, on top of
+    the queue's at-least-once and the checkpointer's auto-resume);
+  * ``only=`` runs a single step in isolation (PPoDS independent testing).
+"""
+from __future__ import annotations
+
+import json
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.metrics import Registry, StepReport, table_one
+from repro.core.orchestrator import Cluster, JobSpec
+from repro.data.objectstore import ObjectStore
+
+
+@dataclass
+class StepCtx:
+    """What a step's fn receives."""
+    cluster: Cluster
+    store: ObjectStore
+    metrics: Registry
+    namespace: str
+    inputs: Dict[str, Any]          # outputs of dependency steps
+    report: StepReport              # fill in data_processed / memory etc.
+
+
+@dataclass
+class Step:
+    name: str
+    fn: Callable[[StepCtx], Any]
+    deps: Sequence[str] = ()
+    pods: int = 1
+    devices_per_pod: int = 0
+
+    def marker_key(self, wf: str) -> str:
+        return f"workflows/{wf}/{self.name}/_COMPLETE"
+
+    def output_key(self, wf: str) -> str:
+        return f"workflows/{wf}/{self.name}/output.json"
+
+
+class Workflow:
+    def __init__(self, name: str, *, cluster: Cluster, store: ObjectStore,
+                 metrics: Optional[Registry] = None, namespace: str = "default"):
+        self.name = name
+        self.cluster = cluster
+        self.store = store
+        self.metrics = metrics or cluster.metrics
+        self.namespace = namespace
+        if namespace not in cluster.namespaces:
+            cluster.create_namespace(namespace)
+        self.steps: Dict[str, Step] = {}
+        self.reports: List[StepReport] = []
+        self.results: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------------ DAG
+    def add(self, step: Step) -> "Workflow":
+        if step.name in self.steps:
+            raise ValueError(f"duplicate step {step.name}")
+        self.steps[step.name] = step
+        return self
+
+    def step(self, name: str, deps: Sequence[str] = (), pods: int = 1,
+             devices_per_pod: int = 0):
+        """Decorator form: @wf.step("train", deps=["download"])"""
+        def deco(fn):
+            self.add(Step(name, fn, deps, pods, devices_per_pod))
+            return fn
+        return deco
+
+    def _topo_order(self) -> List[Step]:
+        order, seen, visiting = [], set(), set()
+
+        def visit(name: str):
+            if name in seen:
+                return
+            if name in visiting:
+                raise ValueError(f"cycle at {name}")
+            visiting.add(name)
+            for d in self.steps[name].deps:
+                visit(d)
+            visiting.discard(name)
+            seen.add(name)
+            order.append(self.steps[name])
+
+        for name in self.steps:
+            visit(name)
+        return order
+
+    # ------------------------------------------------------------------ run
+    def run(self, *, resume: bool = True, only: Optional[str] = None) -> Dict:
+        for step in self._topo_order():
+            if only is not None and step.name != only:
+                # still load completed deps' outputs for the isolated step
+                if self.store.exists(step.marker_key(self.name)):
+                    self.results[step.name] = json.loads(
+                        self.store.get(step.output_key(self.name)))
+                continue
+            self._run_step(step, resume)
+        return dict(self.results)
+
+    def _run_step(self, step: Step, resume: bool) -> None:
+        marker = step.marker_key(self.name)
+        if resume and self.store.exists(marker):
+            self.results[step.name] = json.loads(
+                self.store.get(step.output_key(self.name)))
+            self.metrics.inc(f"workflow/{self.name}/{step.name}/skipped")
+            return
+
+        report = StepReport(step=step.name, pods=step.pods,
+                            cpus=step.pods,
+                            devices=step.pods * step.devices_per_pod)
+        ctx = StepCtx(cluster=self.cluster, store=self.store,
+                      metrics=self.metrics, namespace=self.namespace,
+                      inputs={d: self.results[d] for d in step.deps},
+                      report=report)
+        t0 = time.perf_counter()
+        with self.metrics.timer(f"workflow/{self.name}/{step.name}/time_s"):
+            if step.pods <= 1:
+                out = step.fn(ctx)
+            else:
+                # gang of pods; the step fn coordinates via a WorkQueue
+                job = self.cluster.submit(self.namespace, JobSpec(
+                    name=f"{self.name}-{step.name}", fn=lambda pc: step.fn(ctx),
+                    replicas=1, devices_per_pod=step.devices_per_pod))
+                self.cluster.wait(job)
+                out = job.results()[0]
+        report.total_time_s = time.perf_counter() - t0
+        self.reports.append(report)
+        self.results[step.name] = out
+
+        self.store.put(step.output_key(self.name),
+                       json.dumps(out, default=str).encode())
+        self.store.put(marker, b"ok")
+
+    # ------------------------------------------------------------- reporting
+    def table_one(self) -> str:
+        """The paper's Table I for this workflow."""
+        return table_one(self.reports)
+
+    def reset(self) -> None:
+        for step in self.steps.values():
+            for key in (step.marker_key(self.name), step.output_key(self.name)):
+                self.store.delete(key)
+        self.results.clear()
+        self.reports.clear()

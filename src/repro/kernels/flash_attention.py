@@ -1,0 +1,109 @@
+"""Pallas TPU flash attention (tiled online softmax).
+
+TARGET: TPU v5e MXU/VMEM.  Grid = (batch*kv_heads*q_groups, num_q_blocks,
+num_k_blocks); the k dimension is the innermost ("arbitrary") axis so the
+(m, l, acc) running statistics live in VMEM scratch across k steps and the
+output block is written once on the last step.  Block shapes default to
+(128, head_dim) — MXU-aligned (multiples of 128 on the matmul dims).
+
+Validated on CPU via interpret=True against kernels.ref.attention_ref
+(tests/test_kernels_attention.py sweeps shapes/dtypes/causality).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  num_kb: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)          # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+        kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kb == num_kb - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, scale: Optional[float] = None,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,H,Sq,dh); k/v (B,H,Sk,dh) — GQA callers repeat kv first.
+
+    Returns (B,H,Sq,dh) in q.dtype.
+    """
+    B, H, Sq, dh = q.shape
+    Sk = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nqb, nkb = Sq // block_q, Sk // block_k
+    scale = dh ** -0.5 if scale is None else scale
+
+    qr = q.reshape(B * H, Sq, dh)
+    kr = k.reshape(B * H, Sk, dh)
+    vr = v.reshape(B * H, Sk, dh)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, num_kb=nkb)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nqb, nkb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # running max m
+            pltpu.VMEM((block_q,), jnp.float32),        # running sum l
+            pltpu.VMEM((block_q, dh), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, dh)

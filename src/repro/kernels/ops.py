@@ -1,0 +1,50 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container the wrappers run interpret=True (the kernel body
+executes in Python, validating the BlockSpec/grid logic); on a TPU runtime
+set ``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to compile them.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import gmm
+from repro.kernels.ssm_scan import ssd_scan
+from repro.kernels.wkv6 import wkv6
+
+
+def _interpret_default() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention_op(q, k, v, *, causal: bool = True, block_q: int = 128,
+                       block_k: int = 128):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan_op(x, dt, a, B_, C, *, chunk: int = 128):
+    return ssd_scan(x, dt, a, B_, C, chunk=chunk,
+                    interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6_op(r, k, v, logw, u, *, chunk: int = 64):
+    return wkv6(r, k, v, logw, u, chunk=chunk,
+                interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
+def gmm_op(x, w, *, block_c: int = 128, block_f: int = 128,
+           block_d: int = 128):
+    return gmm(x, w, block_c=block_c, block_f=block_f, block_d=block_d,
+               interpret=_interpret_default())

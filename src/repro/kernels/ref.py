@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ref is the NAIVE, obviously-correct formulation; kernel tests sweep
+shapes/dtypes and assert_allclose kernel(interpret=True) vs these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q (B,H,Sq,dh); k/v (B,H,Sk,dh)."""
+    B, H, Sq, dh = q.shape
+    Sk = k.shape[2]
+    scale = dh ** -0.5 if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a, B_, C, h0):
+    """Naive Mamba2/SSD recurrence, step by step.
+
+    x (B,S,H,hd); dt (B,S,H) > 0; a (H,) < 0; B_/C (B,S,N); h0 (B,H,hd,N).
+    Returns (y (B,S,H,hd) f32, h_last (B,H,hd,N) f32).
+    """
+    Bs, S, H, hd = x.shape
+
+    def step(h, t):
+        da = jnp.exp(dt[:, t] * a)                       # (B,H)
+        upd = jnp.einsum("bh,bn,bhd->bhdn", dt[:, t],
+                         B_[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32))
+        h = da[..., None, None] * h + upd
+        y = jnp.einsum("bn,bhdn->bhd", C[:, t].astype(jnp.float32), h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """Naive RWKV6 recurrence: S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t).
+
+    r/k/v/logw (B,S,H,hd); u (H,hd); s0 (B,H,hd,hd).
+    """
+    def step(s, t):
+        rf = r[:, t].astype(jnp.float32)
+        kf = k[:, t].astype(jnp.float32)
+        vf = v[:, t].astype(jnp.float32)
+        kv = jnp.einsum("bhi,bhj->bhij", kf, vf)
+        y = jnp.einsum("bhi,bhij->bhj", rf,
+                       s + u[None, :, :, None] * kv)
+        s = jnp.exp(logw[:, t].astype(jnp.float32))[..., None] * s + kv
+        return s, y
+
+    s, ys = jax.lax.scan(step, s0.astype(jnp.float32),
+                         jnp.arange(r.shape[1]))
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+def gmm_ref(x, w):
+    """Grouped matmul: x (E,C,D) @ w (E,D,F) -> (E,C,F) in x.dtype."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

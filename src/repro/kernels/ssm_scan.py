@@ -1,0 +1,100 @@
+"""Pallas TPU chunked SSD scan (Mamba2 inner loop).
+
+TARGET: TPU v5e.  Grid = (batch*heads, num_chunks) with the chunk axis
+sequential ("arbitrary") so the (hd, N) SSM state lives in VMEM scratch and
+carries across chunk steps — the inter-chunk recurrence never leaves VMEM.
+Within a chunk the intra-chunk pairwise decay matrix is exact (same math as
+models.ssm._ssd_chunked); chunk length defaults to 128 (lane-aligned).
+
+Validated via interpret=True against kernels.ref.ssd_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *,
+                chunk: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (c, hd)
+    dt = dt_ref[0].astype(jnp.float32)        # (c,)
+    a = a_ref[0, 0]                           # scalar decay rate (<0)
+    bm = b_ref[0].astype(jnp.float32)         # (c, N)
+    cm = c_ref[0].astype(jnp.float32)         # (c, N)
+
+    da = dt * a                               # (c,) negative
+    cum = jnp.cumsum(da)                      # within-chunk log decay
+
+    # intra-chunk: y[t] = sum_{s<=t} (C_t.B_s) exp(cum[t]-cum[s]) dt_s x_s
+    cb_mat = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    delta = cum[:, None] - cum[None, :]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(s_idx <= t_idx, jnp.exp(delta), 0.0)
+    w = cb_mat * L                            # (t, s)
+    dx = dt[:, None] * x                      # (s, hd)
+    y = jax.lax.dot_general(w, dx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # carried-state contribution: y[t] += C_t exp(cum[t]) @ h
+    h = h_scr[...]                            # (N, hd)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # chunk state update: h' = exp(cum[-1]) h + sum_s exp(cum[-1]-cum[s]) B_s dt_s x_s
+    dec_end = jnp.exp(cum[-1] - cum)          # (s,)
+    sB = bm * (dt * dec_end)[:, None]         # (s, N)
+    h_new = jnp.exp(cum[-1]) * h + jax.lax.dot_general(
+        sB, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h_scr[...] = h_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, a, B_, C, *, chunk: int = 128,
+             interpret: bool = False):
+    """Chunked SSD.  x (B,S,H,hd); dt (B,S,H); a (H,); B_/C (B,S,N).
+
+    Returns y (B,S,H,hd) f32 (h_last is recomputed by callers that need it
+    via the ref path; the kernel targets the training hot loop).
+    """
+    Bs, S, H, hd = x.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    # (B,S,H,*) -> (B*H, S, *): each grid row owns one (batch, head) stream
+    xr = jnp.moveaxis(x, 2, 1).reshape(Bs * H, S, hd)
+    dtr = jnp.moveaxis(dt, 2, 1).reshape(Bs * H, S)
+    ar = jnp.broadcast_to(a[None, :], (Bs, H)).reshape(Bs * H, 1)
+    br = jnp.broadcast_to(B_[:, None], (Bs, H, S, N)).reshape(Bs * H, S, N)
+    cr = jnp.broadcast_to(C[:, None], (Bs, H, S, N)).reshape(Bs * H, S, N)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bs * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bs * H, S, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, hd), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, ar, br, cr)
+    return jnp.moveaxis(out.reshape(Bs, H, S, hd), 1, 2)

@@ -1,0 +1,91 @@
+"""Pallas TPU chunked WKV6 kernel (RWKV6 data-dependent decay).
+
+TARGET: TPU v5e.  Grid = (batch*heads, num_chunks), chunk axis sequential;
+the (hd, hd) WKV state is VMEM scratch carried across chunks.  Per-channel
+pairwise decays are computed exactly as in models.ssm._wkv_chunked (log-
+space differences inside the exp).  Chunk defaults to 64 — the (c, c, hd)
+pairwise tensor must fit VMEM: 64*64*64*4B = 1 MiB.
+
+Validated via interpret=True against kernels.ref.wkv6_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *,
+                chunk: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)          # (c, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    logw = w_ref[0].astype(jnp.float32)       # (c, hd) < 0
+    u = u_ref[0].astype(jnp.float32)          # (1?, hd) -> (hd,)
+    u = u.reshape(-1)
+
+    cum = jnp.cumsum(logw, axis=0)            # (c, hd)
+    # y_t reads S_{t-1}: the k_s v_s (s<t) term decays by w_{s+1..t-1},
+    # i.e. exp(cum[t] - logw[t] - cum[s]) — note the one-step shift.
+    cum_prev = cum - logw                     # cum[t-1] (0 for t=0)
+    delta = cum_prev[:, None, :] - cum[None, :, :]         # (t,s,hd)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    strictly_lower = (s_idx < t_idx)[:, :, None]
+    att = jnp.sum(r[:, None, :] * k[None, :, :] *
+                  jnp.where(strictly_lower, jnp.exp(delta), 0.0), axis=-1)
+    y = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # current-token bonus
+    y = y + jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True) * v
+    # carried state: y[t] += (r[t] * exp(cum[t-1])) @ S
+    s = s_scr[...]                            # (hd, hd)
+    y = y + jax.lax.dot_general(r * jnp.exp(cum_prev), s,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # state update: S' = exp(cum[-1]) * S + sum_s (k_s exp(cum[-1]-cum[s]))^T v_s
+    dec_end = jnp.exp(cum[-1:] - cum)         # (s, hd)
+    s_new = jnp.exp(cum[-1])[:, None] * s + jax.lax.dot_general(
+        k * dec_end, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def wkv6(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+    """Chunked WKV6.  r/k/v/logw (B,S,H,hd); u (H,hd) -> y (B,S,H,hd) f32."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def flat(t):
+        return jnp.moveaxis(t, 2, 1).reshape(B * H, S, hd)
+
+    ur = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(flat(r), flat(k), flat(v), flat(logw), ur)
+    return jnp.moveaxis(out.reshape(B, H, S, hd), 1, 2)

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (tests, benches) sees the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (smoke tests use (1, 1) / (1,) meshes on one device)."""
+    return jax.make_mesh(shape, axes)
+
+
+def single_device_mesh(axes: tuple[str, ...] = ("data", "model")) -> Mesh:
+    devs = np.array(jax.devices()[:1]).reshape((1,) * len(axes))
+    return Mesh(devs, axes)
+
+
+def mesh_num_chips(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

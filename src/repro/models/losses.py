@@ -1,0 +1,76 @@
+"""Memory-aware LM loss.
+
+Full logits are (B, S, V) — replicated f32 copies dominate training HBM
+(gemma2: 256k vocab).  Two strategies:
+
+  * ``sharded_cross_entropy`` (preferred when vocab AND seq divide the model
+    axis): logits stay (B, S/tp, V/tp) — both dims sharded — and the
+    softmax/gold reductions are tiny all-reduces.  No gather of logits, no
+    scan machinery; peak is one small f32 block per chip.
+  * ``chunked_cross_entropy`` (fallback for non-divisible vocabs, e.g.
+    granite's 49155): scan over sequence chunks with per-chunk remat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sharded_cross_entropy(ctx, x, labels, head, *, softcap=None):
+    """Mean token NLL with (seq x vocab)-sharded logits.
+
+    x (B,S,D) hidden states; labels (B,S) int32; head (V,D).
+    The gold logit is extracted with a one-hot einsum (elementwise + reduce
+    partitions cleanly; a gather over a sharded vocab would not).
+    """
+    logits = jnp.einsum("bsd,vd->bsv", x, head)            # bf16 compute
+    logits = ctx.cons(logits, ("batch", "act_seq_sharded", "act_vocab"))
+    lf = logits.astype(jnp.float32)
+    if softcap is not None:
+        lf = softcap * jnp.tanh(lf / softcap)
+    m = jnp.max(lf, axis=-1, keepdims=True)                # AR(max) over V
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1))
+    # gather over the sharded vocab dim -> local masked take + tiny AR
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def _chunk_nll(x_chunk, labels_chunk, head):
+    """x (B,c,D) @ head (V,D) -> mean-able NLL terms for one chunk (f32)."""
+    logits = jnp.einsum("bcd,vd->bcv", x_chunk, head).astype(jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    gold = jnp.take_along_axis(logits, labels_chunk[..., None], axis=-1)[..., 0]
+    return jnp.sum(lse - gold)
+
+
+def chunked_cross_entropy(x, labels, head, *, softcap=None, chunk: int = 512):
+    """Mean token NLL from final hidden states, seq-chunked.
+
+    x (B,S,D) final hidden states; labels (B,S) int32; head (V,D).
+    softcap: final-logit softcap (gemma2) — folded into the chunk fn.
+    """
+    B, S, D = x.shape
+
+    def fn(xc, lc):
+        logits = jnp.einsum("bcd,vd->bcv", xc, head).astype(jnp.float32)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        m = jnp.max(logits, axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    fn = jax.checkpoint(fn, prevent_cse=False)
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    if n == 1:
+        total = fn(x, labels)
+    else:
+        xr = x.reshape(B, n, chunk, D).swapaxes(0, 1)          # (n,B,c,D)
+        lr = labels.reshape(B, n, chunk).swapaxes(0, 1)        # (n,B,c)
+        total, _ = jax.lax.scan(
+            lambda acc, xs: (acc + fn(xs[0], xs[1]), None), 0.0, (xr, lr))
+    return total / (B * S)

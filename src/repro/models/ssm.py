@@ -1,0 +1,403 @@
+"""Sequence-mixing recurrences: Mamba2 (SSD), RWKV6 (WKV), zamba2 hybrid.
+
+Recurrent state crosses the sequence dim, so these blocks do NOT sequence-
+shard; the inner/head dims shard on the model axis instead ("tp_inner").
+Both use a *chunked* formulation: exact intra-chunk pairwise math + a
+sequential inter-chunk state scan (S/chunk steps), which is the standard
+sub-quadratic TPU-friendly decomposition (and what the Pallas ssm_scan /
+wkv6 kernels implement for the hot inner part; ref oracle = the naive
+recurrence in repro.kernels.*_ref).
+
+Numerical care: decays live in log space; pairwise (t, s, channel) decay
+differences are computed inside the exp (never exp(+cumlog) alone), so
+chunked == naive to fp tolerance even for strong decay.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ModelCtx, rms_norm
+from repro.models.params import PSpec
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def _mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    return d_in, nheads, s.head_dim, s.state_dim, s.conv_kernel
+
+
+def mamba_schema(cfg: ModelConfig, G: int) -> Dict[str, PSpec]:
+    D = cfg.d_model
+    d_in, H, hd, N, K = _mamba_dims(cfg)
+    return {
+        "ln": PSpec((G, D), ("layers", None), "zeros"),
+        "wz": PSpec((G, D, d_in), ("layers", "fsdp", "tp_inner")),
+        "wx": PSpec((G, D, d_in), ("layers", "fsdp", "tp_inner")),
+        "wB": PSpec((G, D, N), ("layers", "fsdp", None)),
+        "wC": PSpec((G, D, N), ("layers", "fsdp", None)),
+        "wdt": PSpec((G, D, H), ("layers", "fsdp", "tp_inner_heads")),
+        "dt_bias": PSpec((G, H), ("layers", "tp_inner_heads"), "zeros"),
+        "A_log": PSpec((G, H), ("layers", "tp_inner_heads"), "zeros"),
+        "D_skip": PSpec((G, H), ("layers", "tp_inner_heads"), "ones"),
+        "conv_w": PSpec((G, K, d_in), ("layers", "conv_k", "tp_inner"),
+                        scale=0.5),
+        "ln_y": PSpec((G, d_in), ("layers", "tp_inner"), "zeros"),
+        "wout": PSpec((G, d_in, D), ("layers", "tp_inner", "fsdp")),
+    }
+
+
+def mamba_cache_schema(cfg: ModelConfig, B: int, S: int, G: int):
+    d_in, H, hd, N, K = _mamba_dims(cfg)
+    return {
+        "conv": PSpec((G, B, K - 1, d_in),
+                      ("layers", "batch", None, "tp_inner"), "zeros"),
+        "state": PSpec((G, B, H, hd, N),
+                       ("layers", "batch", "tp_inner_heads", None, None),
+                       "zeros", dtype="float32"),
+    }
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv.  x (B,S,C); w (K,C); cache (B,K-1,C) | None."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    out = sum(w[k] * jax.lax.dynamic_slice_in_dim(xp, k, x.shape[1], axis=1)
+              for k in range(K))
+    new_cache = jax.lax.dynamic_slice_in_dim(
+        xp, xp.shape[1] - (K - 1), K - 1, axis=1)
+    return out, new_cache
+
+
+def _ssd_chunked(xh, dt, a, Bm, Cm, h0, chunk: int):
+    """Chunked SSD scan.
+
+    xh (B,S,H,hd) conv'd inputs; dt (B,S,H) >0; a (H,) <0; Bm/Cm (B,S,N);
+    h0 (B,H,hd,N) initial state.  Returns (y (B,S,H,hd), h_last).
+    """
+    Bsz, S, H, hd = xh.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+
+    def r(t):  # (B,S,...) -> (nc,B,c,...)
+        return jnp.moveaxis(t.reshape(Bsz, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xh_c, dt_c, B_c, C_c = r(xh), r(dt), r(Bm), r(Cm)
+    da_c = dt_c * a                      # (nc,B,c,H)  negative
+    cum = jnp.cumsum(da_c, axis=2)       # within-chunk cumulative log-decay
+
+    @jax.checkpoint
+    def step(h, xs):
+        xc, dtc, bc, cc, dac, cumc = xs  # (B,c,...)
+        # intra-chunk: y[t] += sum_{s<=t} C_t.B_s exp(cum[t]-cum[s]) dt_s x_s
+        cb = jnp.einsum("btn,bsn->bts", cc, bc).astype(jnp.float32)
+        delta = cumc[:, :, None, :] - cumc[:, None, :, :]        # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(delta), 0.0)
+        w = cb[..., None] * L                                     # (B,t,s,H)
+        dx = dtc[..., None] * xc.astype(jnp.float32)              # (B,s,H,hd)
+        y = jnp.einsum("btsh,bshd->bthd", w, dx)
+        # inter-chunk: contribution of the carried state
+        y = y + jnp.einsum("btn,bth,bhdn->bthd",
+                           cc.astype(jnp.float32), jnp.exp(cumc), h)
+        # new chunk state
+        decay_to_end = jnp.exp(cumc[:, -1:, :] - cumc)            # (B,s,H)
+        S_chunk = jnp.einsum("bsh,bsn,bshd->bhdn",
+                             (dtc * decay_to_end).astype(jnp.float32),
+                             bc.astype(jnp.float32),
+                             xc.astype(jnp.float32))
+        h_new = jnp.exp(cumc[:, -1, :])[..., None, None] * h + S_chunk
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                              (xh_c, dt_c, B_c, C_c, da_c, cum))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, hd)
+    return y.astype(xh.dtype), h_last
+
+
+def apply_mamba(ctx: ModelCtx, p, x, *, mode, positions, cache, pos, shared,
+                extras):
+    cfg = ctx.cfg
+    d_in, H, hd, N, K = _mamba_dims(cfg)
+    cd = ctx.compute_dtype
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    z = jnp.einsum("bsd,de->bse", h, p["wz"].astype(cd))
+    xs = jnp.einsum("bsd,de->bse", h, p["wx"].astype(cd))
+    Bm = jnp.einsum("bsd,dn->bsn", h, p["wB"].astype(cd))
+    Cm = jnp.einsum("bsd,dn->bsn", h, p["wC"].astype(cd))
+    dt_raw = jnp.einsum("bsd,dh->bsh", h, p["wdt"].astype(cd))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    new_cache = {}
+    if mode == "decode":
+        xs_c, conv_cache = _causal_conv(xs, p["conv_w"].astype(cd),
+                                        cache["conv"])
+        xs_c = jax.nn.silu(xs_c.astype(jnp.float32)).astype(cd)
+        xh = xs_c.reshape(*xs_c.shape[:2], H, hd)
+        st = cache["state"].astype(jnp.float32)        # (B,H,hd,N)
+        da = jnp.exp(dt[:, 0] * a)                     # (B,H)
+        upd = jnp.einsum("bh,bn,bhd->bhdn", dt[:, 0].astype(jnp.float32),
+                         Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        st = da[..., None, None] * st + upd
+        y = jnp.einsum("bn,bhdn->bhd", Cm[:, 0].astype(jnp.float32), st)
+        y = y[:, None].astype(cd)                      # (B,1,H,hd)
+        new_cache = {"conv": conv_cache, "state": st}
+    else:
+        xs_c, conv_cache = _causal_conv(xs, p["conv_w"].astype(cd))
+        xs_c = jax.nn.silu(xs_c.astype(jnp.float32)).astype(cd)
+        xh = xs_c.reshape(*xs_c.shape[:2], H, hd)
+        xh = ctx.cons(xh, ("batch", None, "act_inner_heads", None))
+        h0 = jnp.zeros((x.shape[0], H, hd, N), jnp.float32)
+        y, h_last = _ssd_chunked(xh, dt, a, Bm, Cm, h0, cfg.ssm.chunk)
+        if mode == "prefill":
+            new_cache = {"conv": conv_cache, "state": h_last}
+    y = y + p["D_skip"].astype(cd)[None, None, :, None] * \
+        (xh if mode != "decode" else xh[:, :1])
+    y = y.reshape(*y.shape[:2], d_in)
+    y = rms_norm(y, p["ln_y"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    out = jnp.einsum("bse,ed->bsd", y, p["wout"].astype(cd))
+    return x + out, new_cache, 0.0
+
+
+# --- zamba2 hybrid: mamba + SHARED attention block (weights stored once) ---
+
+def shared_attn_schema(cfg: ModelConfig):
+    from repro.models.transformer import _attn_mlp_schema
+    s = _attn_mlp_schema(cfg, 1)
+    return {k: PSpec(v.shape[1:], v.axes[1:], v.init, v.scale, v.dtype)
+            for k, v in s.items()}
+
+
+def mamba_attn_schema(cfg: ModelConfig, G: int) -> Dict[str, PSpec]:
+    return mamba_schema(cfg, G)
+
+
+def mamba_attn_cache_schema(cfg: ModelConfig, B: int, S: int, G: int):
+    from repro.models.transformer import _attn_cache_schema
+    out = dict(mamba_cache_schema(cfg, B, S, G))
+    out["attn"] = _attn_cache_schema(cfg, B, S, G)
+    return out
+
+
+def apply_mamba_attn(ctx: ModelCtx, p, x, *, mode, positions, cache, pos,
+                     shared, extras):
+    """Mamba block followed by the *shared* attention block (zamba2)."""
+    from repro.models.transformer import attention_part, mlp_part
+    mcache = None if cache is None else {k: cache[k] for k in ("conv", "state")}
+    x, new_mcache, _ = apply_mamba(ctx, p, x, mode=mode, positions=positions,
+                                   cache=mcache, pos=pos, shared=None,
+                                   extras=extras)
+    x, new_attn = attention_part(ctx, shared, x, window=None, mode=mode,
+                                 positions=positions,
+                                 cache=None if cache is None else cache["attn"],
+                                 pos=pos)
+    x = mlp_part(ctx, shared, x, mode)
+    new_cache = dict(new_mcache)
+    if new_attn:
+        new_cache["attn"] = new_attn
+    return x, new_cache, 0.0
+
+
+# ===========================================================================
+# RWKV6 (Finch): data-dependent per-channel decay
+# ===========================================================================
+
+def _rwkv_dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def rwkv_schema(cfg: ModelConfig, G: int) -> Dict[str, PSpec]:
+    D, F = cfg.d_model, cfg.d_ff
+    lora = 64
+    tm = {
+        "ln1": PSpec((G, D), ("layers", None), "zeros"),
+        "mu_r": PSpec((G, D), ("layers", None), "ones", scale=0.5),
+        "mu_k": PSpec((G, D), ("layers", None), "ones", scale=0.5),
+        "mu_v": PSpec((G, D), ("layers", None), "ones", scale=0.5),
+        "mu_w": PSpec((G, D), ("layers", None), "ones", scale=0.5),
+        "mu_g": PSpec((G, D), ("layers", None), "ones", scale=0.5),
+        "wr": PSpec((G, D, D), ("layers", "fsdp", "tp_inner")),
+        "wk": PSpec((G, D, D), ("layers", "fsdp", "tp_inner")),
+        "wv": PSpec((G, D, D), ("layers", "fsdp", "tp_inner")),
+        "wg": PSpec((G, D, D), ("layers", "fsdp", "tp_inner")),
+        "w0": PSpec((G, D), ("layers", None), "zeros"),
+        "wA": PSpec((G, D, lora), ("layers", "fsdp", None), scale=0.01),
+        "wB": PSpec((G, lora, D), ("layers", None, "tp_inner"), scale=0.01),
+        "u": PSpec((G, D), ("layers", None), "zeros"),
+        "ln_x": PSpec((G, D), ("layers", None), "zeros"),
+        "wout": PSpec((G, D, D), ("layers", "tp_inner", "fsdp")),
+        # channel mix
+        "ln2": PSpec((G, D), ("layers", None), "zeros"),
+        "mu_ck": PSpec((G, D), ("layers", None), "ones", scale=0.5),
+        "mu_cr": PSpec((G, D), ("layers", None), "ones", scale=0.5),
+        "wk_c": PSpec((G, D, F), ("layers", "fsdp", "tp_ff")),
+        "wv_c": PSpec((G, F, D), ("layers", "tp_ff", "fsdp")),
+        "wr_c": PSpec((G, D, D), ("layers", "fsdp", "tp_inner")),
+    }
+    return tm
+
+
+def rwkv_cache_schema(cfg: ModelConfig, B: int, S: int, G: int):
+    H, hd = _rwkv_dims(cfg)
+    return {
+        "shift1": PSpec((G, B, 1, cfg.d_model), ("layers", "batch", None, None),
+                        "zeros"),
+        "shift2": PSpec((G, B, 1, cfg.d_model), ("layers", "batch", None, None),
+                        "zeros"),
+        "state": PSpec((G, B, H, hd, hd),
+                       ("layers", "batch", "act_inner_heads", None, None),
+                       "zeros", dtype="float32"),
+    }
+
+
+def _token_shift(x, prev):
+    """x (B,S,D); prev (B,1,D) last token of the previous segment."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, chunk: int):
+    """Chunked WKV6.  r/k/v (B,S,H,hd); logw (B,S,H,hd) <0; u (H,hd);
+    s0 (B,H,hd,hd).  Returns (y (B,S,H,hd), s_last)."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+
+    def rs(t):
+        return jnp.moveaxis(t.reshape(B, nc, chunk, H, hd), 1, 0)
+
+    r_c, k_c, v_c, w_c = rs(r), rs(k), rs(v), rs(logw)
+    cum = jnp.cumsum(w_c, axis=2)        # (nc,B,c,H,hd)
+
+    tri_lt = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    @jax.checkpoint
+    def step(s, xs):
+        rc, kc, vc, cumc, wc = xs        # (B,c,H,hd)
+        rf = rc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        # y_t reads S_{t-1}: pair (s<t) decays by w_{s+1..t-1} =
+        # exp(cum[t] - w[t] - cum[s]) — one-step shift vs the state update.
+        cum_prev = cumc - wc.astype(jnp.float32)
+        delta = cum_prev[:, :, None] - cumc[:, None, :, :]       # (B,t,s,H,hd)
+        att = jnp.einsum("bthi,bshi,btshi->btsh",
+                         rf, kf, jnp.where(tri_lt[None, :, :, None, None],
+                                           jnp.exp(delta), 0.0))
+        y = jnp.einsum("btsh,bshj->bthj", att, vf)
+        # current-token bonus: y[t,j] += (sum_i r[t,i] u[i] k[t,i]) v[t,j]
+        y = y + jnp.einsum("bthi,bthj->bthj",
+                           rf * u.astype(jnp.float32)[None, None] * kf, vf)
+        # carried state contribution: r_t exp(cum[t-1]) @ S
+        y = y + jnp.einsum("bthi,bhij->bthj", rf * jnp.exp(cum_prev), s)
+        # new state: S' = exp(cum[last]) S + sum_s exp(cum[last]-cum[s]) k_s v_s
+        dec_end = jnp.exp(cumc[:, -1:] - cumc)                   # (B,s,H,hd)
+        s_new = jnp.exp(cumc[:, -1])[..., None] * s + \
+            jnp.einsum("bshi,bshj->bhij", kf * dec_end, vf)
+        return s_new, y
+
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32),
+                              (r_c, k_c, v_c, cum, w_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y, s_last
+
+
+def apply_rwkv(ctx: ModelCtx, p, x, *, mode, positions, cache, pos, shared,
+               extras):
+    cfg = ctx.cfg
+    H, hd = _rwkv_dims(cfg)
+    cd = ctx.compute_dtype
+    B, S, D = x.shape
+    new_cache = {}
+
+    # ---- time mix ----
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mode == "decode":
+        hs = cache["shift1"].astype(h.dtype)
+    else:
+        hs = _token_shift(h, jnp.zeros((B, 1, D), h.dtype))
+
+    def mix(mu):
+        return h * mu.astype(cd) + hs * (1.0 - mu.astype(cd))
+
+    r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["wr"].astype(cd))
+    k = jnp.einsum("bsd,de->bse", mix(p["mu_k"]), p["wk"].astype(cd))
+    v = jnp.einsum("bsd,de->bse", mix(p["mu_v"]), p["wv"].astype(cd))
+    g = jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["wg"].astype(cd))
+    wx = mix(p["mu_w"])
+    lora = jnp.einsum("bsd,dl->bsl", wx, p["wA"].astype(cd))
+    lora = jnp.einsum("bsl,ld->bsd", jnp.tanh(lora), p["wB"].astype(cd))
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)
+                    + lora.astype(jnp.float32))          # (B,S,D) < 0
+    logw = jnp.maximum(logw, -8.0)                       # numerical floor
+
+    ax = ("batch", None, "act_inner_heads", None)
+    rh = ctx.cons(r.reshape(B, S, H, hd), ax)
+    kh = ctx.cons(k.reshape(B, S, H, hd), ax)
+    vh = ctx.cons(v.reshape(B, S, H, hd), ax)
+    wh = ctx.cons(logw.reshape(B, S, H, hd), ax)
+    uh = p["u"].astype(jnp.float32).reshape(H, hd)
+
+    if mode == "decode":
+        st = cache["state"].astype(jnp.float32)          # (B,H,hd,hd)
+        rf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (rh, kh, vh))
+        kv = jnp.einsum("bhi,bhj->bhij", kf, vf)
+        y = jnp.einsum("bhi,bhij->bhj", rf, st + uh[None, :, :, None] * kv)
+        st = jnp.exp(wh[:, 0].astype(jnp.float32))[..., None] * st + kv
+        y = y[:, None]                                   # (B,1,H,hd)
+        new_cache = {"shift1": h, "state": st}
+    else:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        y, s_last = _wkv_chunked(rh, kh, vh, wh, uh, s0, cfg.rwkv.chunk)
+        if mode == "prefill":
+            new_cache = {"shift1": h[:, -1:], "state": s_last}
+    y = y.reshape(B, S if mode != "decode" else 1, D).astype(cd)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(cd)
+    out = jnp.einsum("bse,ed->bsd", y, p["wout"].astype(cd))
+    x = x + out
+
+    # ---- channel mix ----
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    prev2 = cache["shift2"].astype(h2.dtype) if mode == "decode" else \
+        jnp.zeros((B, 1, D), h2.dtype)
+    hs2 = _token_shift(h2, prev2) if mode != "decode" else prev2
+
+    def mix2(mu):
+        return h2 * mu.astype(cd) + hs2 * (1.0 - mu.astype(cd))
+
+    kc = jnp.einsum("bsd,df->bsf", mix2(p["mu_ck"]), p["wk_c"].astype(cd))
+    kc = jnp.square(jax.nn.relu(kc.astype(jnp.float32))).astype(cd)
+    vc = jnp.einsum("bsf,fd->bsd", kc, p["wv_c"].astype(cd))
+    rc = jax.nn.sigmoid(jnp.einsum(
+        "bsd,de->bse", mix2(p["mu_cr"]), p["wr_c"].astype(cd)
+    ).astype(jnp.float32)).astype(cd)
+    x = x + rc * vc
+    if mode == "decode":
+        new_cache["shift2"] = h2
+    elif mode == "prefill":
+        new_cache["shift2"] = h2[:, -1:]
+    return x, new_cache, 0.0

@@ -1,0 +1,43 @@
+"""Blockwise int8 quantization for optimizer moments / gradient compression.
+
+Block = 128 along the last dim when divisible (TPU-lane aligned), else the
+whole last dim.  Symmetric absmax scaling, stored as {"q": int8, "s": f32}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def block_size(last_dim: int) -> int:
+    return BLOCK if last_dim % BLOCK == 0 else last_dim
+
+
+def quantize(x: jax.Array) -> dict:
+    b = block_size(x.shape[-1]) if x.ndim else 1
+    xb = x.reshape(x.shape[:-1] + (x.shape[-1] // b, b)) if x.ndim else x.reshape(1, 1)
+    s = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(xb / s), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(x.shape) if x.ndim else q.reshape(()),
+            "s": s[..., 0].astype(jnp.float32)}
+
+
+def dequantize(qs: dict, shape=None) -> jax.Array:
+    q, s = qs["q"], qs["s"]
+    if q.ndim == 0:
+        return q.astype(jnp.float32) * s.reshape(())
+    b = q.shape[-1] // max(s.shape[-1], 1)
+    qb = q.reshape(q.shape[:-1] + (s.shape[-1], b)).astype(jnp.float32)
+    out = qb * s[..., None]
+    return out.reshape(q.shape)
+
+
+def quantized_shapes(shape: tuple, ndim_ok: bool = True):
+    """(q_shape, s_shape) for a tensor of `shape`."""
+    if not shape:
+        return shape, ()
+    b = block_size(shape[-1])
+    return shape, shape[:-1] + (shape[-1] // b,)

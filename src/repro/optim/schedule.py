@@ -1,0 +1,21 @@
+"""LR schedules as pure functions of the step counter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def learning_rate(ocfg: OptimizerConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.maximum(ocfg.warmup_steps, 1)
+    warmup = step / warm
+    if ocfg.schedule == "constant":
+        decay = jnp.ones_like(step)
+    elif ocfg.schedule == "linear":
+        t = jnp.clip((step - warm) / jnp.maximum(ocfg.decay_steps - warm, 1), 0, 1)
+        decay = 1.0 - t
+    else:  # cosine
+        t = jnp.clip((step - warm) / jnp.maximum(ocfg.decay_steps - warm, 1), 0, 1)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return ocfg.lr * jnp.minimum(warmup, 1.0) * jnp.where(step < warm, 1.0, decay)

@@ -1,0 +1,138 @@
+"""§Roofline: three-term analysis per (arch x shape) from the dry-run.
+
+    compute term    = step_FLOPs        / (chips * 197e12)   [bf16 MXU]
+    memory term     = HBM bytes moved   / (chips * 819e9)
+    collective term = collective bytes  / (chips * 50e9)     [per-link ICI]
+
+FLOPs/bytes come from the analytic implementation-exact accounting
+(repro.roofline.flops — XLA's cost_analysis cannot see through scan bodies;
+the G-diff collective bytes DO come from the compiled artifact).  Also
+reported per cell: MODEL_FLOPS = 6·N_active·D, the useful/HLO-equivalent
+ratio, the dominant term, and what would move it (the §Perf hillclimb
+hypotheses start from this table).
+
+    PYTHONPATH=src python -m repro.roofline.report --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.roofline import flops as flops_mod
+
+PEAK_FLOPS = 197e12       # bf16 / chip (v5e)
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / link (ICI)
+
+
+def cell_roofline(arch: str, shape_name: str, rec: Optional[dict],
+                  chips: int = 256) -> Dict:
+    cfg = registry.get_config(arch)
+    ocfg = registry.get_optimizer(arch)
+    shape = SHAPES[shape_name]
+    acc = flops_mod.accounting(cfg, shape, chips, ocfg)
+
+    flops_chip = acc.step_flops_global / chips
+    bytes_chip = acc.act_bytes_global / chips
+    coll_chip = 0.0
+    coll_kinds = {}
+    if rec and "gdiff" in rec and "step_total" in rec["gdiff"]:
+        coll_kinds = rec["gdiff"]["step_total"]
+        # prefer the TPU-dtype-corrected number (XLA:CPU upcasts bf16 dot
+        # operands to f32 before the partitioner places collectives)
+        coll_chip = coll_kinds.get("total_bf16adj",
+                                   coll_kinds.get("total", 0))
+    compute_t = flops_chip / PEAK_FLOPS
+    memory_t = bytes_chip / HBM_BW
+    coll_t = coll_chip / LINK_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful_t = (acc.model_flops / chips) / PEAK_FLOPS
+    out = {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        "params": acc.params, "active_params": acc.active_params,
+        "step_flops": acc.step_flops_global,
+        "model_flops": acc.model_flops,
+        "useful_ratio": acc.model_flops / max(acc.step_flops_global, 1),
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "collective_kinds": coll_kinds,
+        "dominant": dominant,
+        "roofline_fraction": useful_t / max(bound, 1e-30),
+        "mfu_upper_bound": useful_t / max(sum(terms.values()), 1e-30),
+    }
+    if rec:
+        out["xla_temp_bytes"] = rec.get("memory", {}).get(
+            "temp_size_in_bytes", 0)
+        out["xla_args_bytes"] = rec.get("memory", {}).get(
+            "argument_size_in_bytes", 0)
+        out["compile_s"] = rec.get("compile_s")
+    return out
+
+
+def _advice(row: Dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.4:
+            return ("compute-bound with low useful ratio: cut remat "
+                    "recompute / masked-attention waste / MoE padding")
+        return "compute-bound near-useful: increase per-chip batch or accept"
+    if d == "memory":
+        return ("HBM-bound: fuse/avoid activation round-trips; decode -> "
+                "bigger batch amortizes weight reads")
+    return ("collective-bound: resharding or FSDP gathers dominate — change "
+            "layouts (seq vs heads), hierarchical/overlapped collectives")
+
+
+def build_table(dry_dir: str, chips: int = 256) -> List[Dict]:
+    d = Path(dry_dir)
+    rows = []
+    for arch, shape, skipped in registry.cells(include_skipped=True):
+        if skipped:
+            rows.append({"arch": arch, "shape": shape.name,
+                         "skipped": "long_500k needs sub-quadratic attention"
+                                    " (pure full-attention arch)"})
+            continue
+        path = d / f"{arch}__{shape.name}__16x16.json"
+        rec = json.loads(path.read_text()) if path.exists() else None
+        row = cell_roofline(arch, shape.name, rec, chips)
+        row["advice"] = _advice(row)
+        rows.append(row)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    head = ("| arch | shape | compute s | memory s | collective s | dominant "
+            "| MODEL/HLO | roofline frac | next lever |")
+    sep = "|" + "---|" * 9
+    lines = [head, sep]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | SKIP: {r['skipped']} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} | {r['advice']} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--json-out", default="experiments/roofline.json")
+    args = ap.parse_args()
+    rows = build_table(args.dir)
+    Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.json_out).write_text(json.dumps(rows, indent=1))
+    print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

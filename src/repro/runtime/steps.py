@@ -1,0 +1,253 @@
+"""Step functions (train / prefill / serve) + their sharding trees.
+
+Everything the launcher, dry-run, and tests need to jit a step:
+  build_train(cfg, par, ocfg, mesh)   -> StepBundle
+  build_prefill(cfg, par, mesh, shape)-> StepBundle
+  build_decode(cfg, par, mesh, shape) -> StepBundle
+
+A StepBundle carries the python fn, abstract inputs, and in/out NamedShardings
+so ``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*abstract)`` is
+one call (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ParallelConfig,
+                                ShapeConfig)
+from repro.models import params as pr
+from repro.models import transformer as tfm
+from repro.models.layers import ModelCtx
+from repro.optim import adamw
+from repro.sharding import specs as sh
+
+
+@dataclass
+class StepBundle:
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jit().lower(*self.abstract_args)
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+def _shardings(tree_abstract, tree_axes, mesh, rules):
+    return jax.tree.map(
+        lambda sds, ax: sh.sharding_for(sds.shape, ax, mesh, rules),
+        tree_abstract, tree_axes, is_leaf=lambda x: _is_axes_leaf(x))
+
+
+def _replicated(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _model_module(cfg: ModelConfig):
+    if cfg.family == "audio":
+        from repro.models import encdec
+        return encdec
+    return tfm
+
+
+def resolve_cfg(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Bind shape-dependent stub dims (whisper frame count) into the config."""
+    if cfg.family == "audio" and cfg.encoder_frames == 0:
+        return cfg.replace(encoder_frames=shape.seq_len)
+    return cfg
+
+
+def token_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Token-sequence length for train/prefill (enc-dec: decoder length)."""
+    return cfg.decoder_len if cfg.family == "audio" else shape.seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(abstract, axes) for one global training batch."""
+    B, S = shape.global_batch, token_len(cfg, shape)
+    abstract = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    ex_abs, ex_axes = extras_specs(cfg, B)
+    if ex_abs:
+        abstract["extras"], axes["extras"] = ex_abs, ex_axes
+    return abstract, axes
+
+
+def extras_specs(cfg: ModelConfig, B: int):
+    """Modality-frontend stubs (precomputed embeddings), per DESIGN.md §4."""
+    if cfg.family == "vlm":
+        return ({"image_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.num_patches, cfg.vision_dim), jnp.bfloat16)},
+                {"image_embeds": ("batch", None, None)})
+    if cfg.family == "audio":
+        return ({"frames": jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)},
+                {"frames": ("batch", "seq", None)})
+    return None, None
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def build_train(cfg: ModelConfig, par: ParallelConfig, ocfg: OptimizerConfig,
+                mesh: Mesh, shape: ShapeConfig) -> StepBundle:
+    cfg = resolve_cfg(cfg, shape)
+    if par.pure_fsdp_train and not par.pure_fsdp:
+        import dataclasses as _dc
+        import numpy as _np
+        chips = int(_np.prod(list(mesh.shape.values())))
+        if shape.global_batch % chips == 0:
+            par = _dc.replace(par, pure_fsdp=True)
+    mod = _model_module(cfg)
+    ctx = ModelCtx(cfg, par, mesh)
+    rules = sh.logical_rules(par)
+    schema = mod.lm_schema(cfg)
+    opt_schema = adamw.opt_state_schema(schema, ocfg)
+
+    abstract_params = pr.abstract_params(schema, cfg.param_dtype)
+    abstract_opt = pr.abstract_params(opt_schema, "float32")
+    param_shd = sh.shardings_for_schema(schema, mesh, rules)
+    opt_shd = sh.shardings_for_schema(opt_schema, mesh, rules)
+    batch_abs, batch_axes = batch_specs(cfg, shape)
+    batch_shd = _shardings(batch_abs, batch_axes, mesh, rules)
+
+    accum = max(ocfg.accum_steps, 1)
+
+    def train_step(params, opt_state, batch):
+        def loss_of(p, b):
+            return mod.loss_fn(ctx, p, b)
+
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc_loss, acc_g = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (acc_loss + l,
+                        jax.tree.map(jnp.add, acc_g, g)), None
+            micro_b = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), micro_b)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+
+        new_params, new_opt, stats = adamw.apply_updates(
+            schema, params, grads, opt_state, ocfg)
+        metrics = {"loss": loss.astype(jnp.float32), **stats}
+        return new_params, new_opt, metrics
+
+    metrics_abs = {"loss": jax.ShapeDtypeStruct((), jnp.float32),
+                   "grad_norm": jax.ShapeDtypeStruct((), jnp.float32),
+                   "lr": jax.ShapeDtypeStruct((), jnp.float32)}
+    return StepBundle(
+        fn=train_step,
+        abstract_args=(abstract_params, abstract_opt, batch_abs),
+        in_shardings=(param_shd, opt_shd, batch_shd),
+        out_shardings=(param_shd, opt_shd, _replicated(metrics_abs, mesh)),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def build_prefill(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh,
+                  shape: ShapeConfig) -> StepBundle:
+    cfg = resolve_cfg(cfg, shape)
+    mod = _model_module(cfg)
+    ctx = ModelCtx(cfg, par, mesh)
+    rules = sh.logical_rules(par)
+    schema = mod.lm_schema(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    T = token_len(cfg, shape)
+
+    abstract_params = pr.abstract_params(schema, cfg.param_dtype)
+    param_shd = sh.shardings_for_schema(schema, mesh, rules)
+    tok_abs = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    tok_shd = sh.sharding_for((B, T), ("batch", "seq"), mesh, rules)
+    cache_schema = mod.cache_schema(cfg, B, S)
+    cache_shd = sh.shardings_for_schema(cache_schema, mesh, rules)
+    ex_abs, ex_axes = extras_specs(cfg, B)
+    extra_args, extra_shd = ((ex_abs,), (_shardings(ex_abs, ex_axes, mesh, rules),)) \
+        if ex_abs else ((), ())
+
+    def prefill_step(params, tokens, *extras):
+        ex = extras[0] if extras else None
+        hidden, caches, _ = mod.forward(ctx, params, tokens, mode="prefill",
+                                        extras=ex)
+        # unembed only the last position: (B,1,V), not (B,S,V)
+        last = mod.lm_logits(ctx, params, hidden[:, -1:, :])[:, 0, :]
+        return last, caches
+
+    last_shd = sh.sharding_for((B, cfg.vocab_size), ("batch", "act_vocab"),
+                               mesh, rules)
+    return StepBundle(
+        fn=prefill_step,
+        abstract_args=(abstract_params, tok_abs) + extra_args,
+        in_shardings=(param_shd, tok_shd) + extra_shd,
+        out_shardings=(last_shd, cache_shd),
+    )
+
+
+def build_decode(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh,
+                 shape: ShapeConfig) -> StepBundle:
+    cfg = resolve_cfg(cfg, shape)
+    mod = _model_module(cfg)
+    ctx = ModelCtx(cfg, par, mesh)
+    rules = sh.logical_rules(par)
+    schema = mod.lm_schema(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    abstract_params = pr.abstract_params(schema, cfg.param_dtype)
+    param_shd = sh.shardings_for_schema(schema, mesh, rules)
+    cache_schema = mod.cache_schema(cfg, B, S)
+    abstract_cache = pr.abstract_params(cache_schema, cfg.param_dtype)
+    cache_shd = sh.shardings_for_schema(cache_schema, mesh, rules)
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_shd = sh.sharding_for((B, 1), ("batch", None), mesh, rules)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shd = NamedSharding(mesh, P())
+
+    def serve_step(params, caches, token, pos):
+        hidden, new_caches, _ = mod.forward(ctx, params, token, mode="decode",
+                                            caches=caches, pos=pos)
+        logits = mod.lm_logits(ctx, params, hidden)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_caches
+
+    return StepBundle(
+        fn=serve_step,
+        abstract_args=(abstract_params, abstract_cache, tok_abs, pos_abs),
+        in_shardings=(param_shd, cache_shd, tok_shd, pos_shd),
+        out_shardings=(tok_shd, cache_shd),
+        donate_argnums=(1,),
+    )
+
+
+def build_step(cfg, par, ocfg, mesh, shape: ShapeConfig) -> StepBundle:
+    if shape.kind == "train":
+        return build_train(cfg, par, ocfg, mesh, shape)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, par, mesh, shape)
+    return build_decode(cfg, par, mesh, shape)

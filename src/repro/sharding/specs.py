@@ -1,0 +1,141 @@
+"""Logical-axis -> mesh-axis rules (MaxText-style), divisibility-aware.
+
+A logical axis names *what* a tensor dimension is; the rules decide *where*
+it lives on the mesh.  Rules silently drop to replication when the dimension
+size does not divide the mesh axis (e.g. 24 q-heads on a 16-way model axis,
+8 kv-heads on 16) — GSPMD supports uneven shardings but padded shards waste
+memory + collective bytes, so divisible-only keeps the roofline honest.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+from repro.models.params import PSpec, tree_map_schema
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+def logical_rules(par: ParallelConfig) -> dict[str, Axis]:
+    """Active logical->mesh mapping for a ParallelConfig."""
+    if par.pure_fsdp:
+        return {
+            # batch over every mesh axis; weights ZeRO-3 over (data, model);
+            # no tensor/sequence parallelism -> zero activation collectives
+            "batch": ("pod", "data", "model"),
+            "seq": None, "act_seq_sharded": None,
+            "heads": None, "kv_heads": None, "act_ff": None,
+            "act_vocab": None, "act_inner_heads": None,
+            "cache_seq": "model" if par.context_parallel_decode else None,
+            "head_dim": None, "state": None,
+            "fsdp": ("data", "model"), "tp_heads": None, "tp_kv_heads": None,
+            "tp_head_dim": None, "tp_ff": None, "tp_vocab": None,
+            "expert": None, "tp_inner": None, "tp_inner_heads": None,
+            "layers": None, "conv_k": None,
+        }
+    rules: dict[str, Axis] = {
+        # --- activations ---
+        "batch": ("pod", "data"),
+        "seq": None,
+        "act_seq_sharded": "model" if par.sequence_parallel else None,
+        "heads": "model" if par.tensor_parallel else None,
+        "kv_heads": "model" if par.tensor_parallel else None,
+        "act_ff": "model" if par.tensor_parallel else None,
+        "act_vocab": "model" if par.tensor_parallel else None,
+        "cache_seq": "model" if par.context_parallel_decode else None,
+        "head_dim": None,
+        "state": None,
+        "act_inner_heads": "model" if par.tensor_parallel else None,
+        # --- params ---
+        "fsdp": "data" if par.fsdp else None,
+        "tp_heads": "model" if par.tensor_parallel else None,
+        "tp_kv_heads": "model" if par.tensor_parallel else None,
+        "tp_head_dim": "model" if par.tensor_parallel else None,
+        "tp_ff": "model" if par.tensor_parallel else None,
+        "tp_vocab": "model" if par.tensor_parallel else None,
+        "expert": "model" if par.expert_parallel else None,
+        "tp_inner": "model" if par.tensor_parallel else None,
+        "tp_inner_heads": "model" if par.tensor_parallel else None,
+        "layers": None,
+        "conv_k": None,
+    }
+    return rules
+
+
+def _mesh_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.shape else 1
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a] if a in mesh.shape else 1
+    return n
+
+
+def _present(mesh: Mesh, axis: Axis) -> Axis:
+    """Restrict a rule to axes actually present in the mesh (pod may be absent)."""
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in mesh.shape else None
+    kept = tuple(a for a in axis if a in mesh.shape)
+    return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             mesh: Mesh, rules: dict[str, Axis]) -> P:
+    """PartitionSpec for one tensor, dropping non-divisible rules.
+
+    Tuple rules degrade gracefully: ("pod","data","model") that does not
+    divide the dim retries without its leading axis before replicating.
+    """
+    entries = []
+    used: set[str] = set()
+    for dim, name in zip(shape, axes):
+        axis = _present(mesh, rules.get(name)) if name else None
+        if axis is not None:
+            candidates = [axis]
+            if isinstance(axis, tuple):
+                candidates += [axis[i:] if len(axis[i:]) > 1 else axis[-1]
+                               for i in range(1, len(axis))]
+            chosen = None
+            for cand in candidates:
+                flat = (cand,) if isinstance(cand, str) else cand
+                if (not any(a in used for a in flat)
+                        and dim % _mesh_size(mesh, cand) == 0):
+                    chosen = cand
+                    used.update(flat)
+                    break
+            axis = chosen
+        entries.append(axis)
+    return P(*entries)
+
+
+def sharding_for(shape, axes, mesh, rules) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def shardings_for_schema(schema, mesh: Mesh, rules: dict[str, Axis]):
+    """NamedSharding tree mirroring a param schema."""
+    return tree_map_schema(
+        lambda _p, p: sharding_for(p.shape, p.axes, mesh, rules), schema)
+
+
+def shardings_like(tree_of_sds, tree_of_axes, mesh, rules):
+    """NamedSharding tree for an arbitrary (ShapeDtypeStruct, axes) pair of trees."""
+    return jax.tree.map(
+        lambda sds, ax: sharding_for(sds.shape, ax, mesh, rules),
+        tree_of_sds, tree_of_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]], mesh: Mesh,
+              rules: dict[str, Axis]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op outside jit tracing)."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(x.shape, axes, mesh, rules)))

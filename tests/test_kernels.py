@@ -1,0 +1,97 @@
+"""Per-kernel correctness: sweep shapes/dtypes, interpret=True vs ref oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import gmm
+from repro.kernels.ssm_scan import ssd_scan
+from repro.kernels.wkv6 import wkv6
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,Sq,Sk,dh", [
+    (1, 1, 128, 128, 64),
+    (2, 3, 256, 256, 64),
+    (1, 2, 128, 384, 32),     # rectangular (prefill-like), Sq < Sk
+    (2, 1, 512, 512, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(B, H, Sq, Sk, dh, dtype, causal):
+    if causal and Sq != Sk:
+        pytest.skip("causal offset variant covered by equal-length cases")
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(k1, (B, H, Sq, dh), dtype)
+    k = jax.random.normal(k2, (B, H, Sk, dh), dtype)
+    v = jax.random.normal(k3, (B, H, Sk, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,hd,N,chunk", [
+    (1, 64, 1, 16, 8, 16),
+    (2, 128, 3, 32, 16, 32),
+    (1, 256, 2, 64, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(B, S, H, hd, N, chunk, dtype):
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(jnp.float32)
+    a = -jnp.exp(jax.random.normal(ks[2], (H,))).astype(jnp.float32)
+    B_ = jax.random.normal(ks[3], (B, S, N), dtype)
+    C = jax.random.normal(ks[4], (B, S, N), dtype)
+    out = ssd_scan(x, dt, a, B_, C, chunk=chunk, interpret=True)
+    want, _ = ref.ssd_ref(x, dt, a, B_, C,
+                          jnp.zeros((B, H, hd, N), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=4e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=4e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (1, 64, 1, 16, 16),
+    (2, 128, 2, 32, 32),
+    (1, 128, 4, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6(B, S, H, hd, chunk, dtype):
+    ks = jax.random.split(jax.random.key(2), 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, hd), dtype)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, hd))).astype(jnp.float32)
+    logw = jnp.maximum(logw, -8.0)
+    u = jax.random.normal(ks[4], (H, hd), jnp.float32)
+    out = wkv6(r, k, v, logw.astype(dtype), u, chunk=chunk, interpret=True)
+    want, _ = ref.wkv6_ref(r, k, v, logw.astype(dtype), u,
+                           jnp.zeros((B, H, hd, hd), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 2e-3,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-3)
+
+
+@pytest.mark.parametrize("E,C,D,F,bc,bf,bd", [
+    (2, 128, 64, 128, 128, 128, 64),
+    (4, 256, 128, 256, 128, 128, 128),
+    (1, 128, 256, 128, 64, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm(E, C, D, F, bc, bf, bd, dtype):
+    k1, k2 = jax.random.split(jax.random.key(3))
+    x = jax.random.normal(k1, (E, C, D), dtype)
+    w = jax.random.normal(k2, (E, D, F), dtype)
+    out = gmm(x, w, block_c=bc, block_f=bf, block_d=bd, interpret=True)
+    want = ref.gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))

@@ -1,0 +1,113 @@
+"""Hypothesis property tests: the work queue's fault-tolerance invariants.
+
+These are the invariants the paper's Redis-queue workflow depends on:
+every item is processed at least once, acks are idempotent, crashed
+workers' leases are reclaimed, and snapshots restore to an equivalent
+queue.
+"""
+import itertools
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.queue import WorkQueue, run_workers
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@settings(max_examples=50, deadline=None)
+@given(items=st.lists(st.integers(), min_size=0, max_size=30),
+       workers=st.integers(min_value=1, max_value=5))
+def test_all_items_processed_exactly_once_when_no_failures(items, workers):
+    q = WorkQueue(items, lease_timeout=60.0)
+    seen = []
+    out = run_workers(q, lambda x: seen.append(x) or x, workers)
+    assert sorted(out) == sorted(items)
+    assert q.completed == len(items)
+    assert q.drained()
+
+
+@settings(max_examples=30, deadline=None)
+@given(items=st.lists(st.integers(), min_size=1, max_size=20),
+       fail_every=st.integers(min_value=2, max_value=5))
+def test_at_least_once_under_worker_crashes(items, fail_every):
+    """Workers that crash on some attempts: every item still completes."""
+    q = WorkQueue(items, lease_timeout=60.0, max_attempts=50)
+    counter = itertools.count()
+
+    def flaky(x):
+        if next(counter) % fail_every == 0:
+            raise RuntimeError("simulated pod crash")
+        return x
+
+    out = run_workers(q, flaky, 3)
+    assert sorted(out) == sorted(items)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(min_value=1, max_value=10))
+def test_lease_expiry_requeues(n):
+    clock = FakeClock()
+    q = WorkQueue(range(n), lease_timeout=10.0, clock=clock)
+    got = q.lease("w1")
+    assert got is not None
+    tid, item = got
+    # w1 dies; lease expires; another worker gets the same task
+    clock.advance(11.0)
+    seen = set()
+    while True:
+        g = q.lease("w2")
+        if g is None:
+            break
+        seen.add(g[0])
+        q.ack(g[0], "w2")
+    assert tid in seen                      # reclaimed
+    assert not q.ack(tid, "w1")             # stale ack rejected
+    assert q.drained()
+
+
+@settings(max_examples=50, deadline=None)
+@given(items=st.lists(st.integers(), min_size=0, max_size=20),
+       n_done=st.integers(min_value=0, max_value=20))
+def test_snapshot_restore_equivalence(items, n_done):
+    q = WorkQueue(items, lease_timeout=5.0)
+    done = 0
+    for _ in range(min(n_done, len(items))):
+        g = q.lease("w")
+        if g is None:
+            break
+        q.ack(g[0], "w")
+        done += 1
+    q2 = WorkQueue.restore(q.snapshot())
+    assert q2.completed == done
+    assert q2.pending == len(items) - done
+    # draining the restored queue completes everything
+    run_workers(q2, lambda x: x, 2)
+    assert q2.drained()
+
+
+def test_dead_letter_after_max_attempts():
+    clock = FakeClock()
+    q = WorkQueue([1], lease_timeout=1.0, max_attempts=3, clock=clock)
+    for _ in range(3):
+        g = q.lease("w")
+        assert g is not None
+        clock.advance(2.0)                  # let the lease expire
+    assert q.lease("w") is None
+    assert len(q.dead) == 1
+    assert q.drained()
+
+
+def test_double_ack_idempotent():
+    q = WorkQueue([42])
+    tid, _ = q.lease("w")
+    assert q.ack(tid, "w") is True
+    assert q.ack(tid, "w") is False

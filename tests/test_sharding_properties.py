@@ -1,0 +1,70 @@
+"""Hypothesis property tests on the sharding-rule layer: specs never
+produce non-divisible shardings, never reuse a mesh axis, and degrade to
+replication on axes absent from the mesh."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ParallelConfig
+from repro.sharding import specs as sh
+
+RULES = sh.logical_rules(ParallelConfig())
+LOGICAL = list(RULES.keys())
+
+
+def fake_mesh(shape=(4, 2), axes=("data", "model")):
+    devs = np.empty(shape, dtype=object)
+    it = np.nditer(devs, flags=["refs_ok", "multi_index"])
+    for i, _ in enumerate(it):
+        devs[it.multi_index] = i
+    # Mesh over fake device ids works for spec computation only
+    return Mesh(np.array(jax.devices() * int(np.prod(shape)))[
+        :int(np.prod(shape))].reshape(shape), axes)
+
+
+MESH = fake_mesh()
+
+
+@settings(max_examples=200, deadline=None)
+@given(dims=st.lists(st.integers(min_value=1, max_value=64), min_size=1,
+                     max_size=4),
+       names=st.lists(st.sampled_from(LOGICAL + [None]), min_size=1,
+                      max_size=4))
+def test_spec_divisibility_and_axis_uniqueness(dims, names):
+    n = min(len(dims), len(names))
+    dims, names = tuple(dims[:n]), tuple(names[:n])
+    spec = sh.spec_for(dims, names, MESH, RULES)
+    used = []
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        for a in axes:
+            assert a in MESH.shape
+            used.append(a)
+        size = int(np.prod([MESH.shape[a] for a in axes]))
+        assert dim % size == 0, (dims, names, spec)
+    assert len(used) == len(set(used)), f"mesh axis reused: {spec}"
+
+
+def test_pod_axis_dropped_on_single_pod_mesh():
+    spec = sh.spec_for((8, 4), ("batch", None), MESH, RULES)
+    # "batch" -> ("pod","data"); pod absent -> only data
+    assert spec[0] == "data"
+
+
+def test_non_divisible_falls_back_to_replication():
+    spec = sh.spec_for((3, 5), ("batch", "tp_ff"), MESH, RULES)
+    assert spec[0] is None and spec[1] is None
+
+
+def test_shardings_for_schema_tree():
+    from repro.models.params import PSpec
+    schema = {"w": PSpec((8, 4), ("fsdp", "tp_ff")),
+              "b": {"x": PSpec((6,), (None,))}}
+    tree = sh.shardings_for_schema(schema, MESH, RULES)
+    assert tree["w"].spec == jax.sharding.PartitionSpec("data", "model")
+    assert tree["b"]["x"].spec == jax.sharding.PartitionSpec(None)
