@@ -1,13 +1,18 @@
-"""Batched LM serving through the work queue (paper job pattern).
+"""Continuous-batching LM serving through the work queue.
 
     PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-9b]
 
-Requests land in the fault-tolerant WorkQueue; the server forms batches,
-prefills once (KV cache build), then decodes greedily with a donated cache.
+Requests land in the fault-tolerant WorkQueue (the paper's Redis job
+queue); a fixed pool of decode slots serves them with per-request prefill
+and one fused per-slot decode step per iteration.  Requests ask for
+different stop lengths, so slots evict early and refill from the queue
+mid-flight — watch ``serve/slot_occupancy`` stay high while short and
+long requests mix.
 """
 import argparse
 
-from repro.launch.serve import serve
+from repro.launch.serve import serve, serving_report
+from repro.core.metrics import table_one
 
 
 def main():
@@ -17,11 +22,13 @@ def main():
     args = ap.parse_args()
     results, metrics = serve(args.arch, smoke=True,
                              n_requests=args.requests, prompt_len=24,
-                             gen=12, batch=4)
+                             gen=12, batch=4, gen_lens=[12, 3, 6, 3])
     print(f"served {len(results)} requests on {args.arch} (reduced config)")
     for rid in sorted(results)[:3]:
         print(f"  request {rid}: generated {results[rid]}")
     print(metrics.to_csv())
+    print()
+    print(table_one([serving_report(metrics)]))
     assert len(results) == args.requests
 
 

@@ -38,6 +38,14 @@ class Series:
     def max(self) -> float:
         return max((v for _, v in self.points), default=0.0)
 
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile of recorded values, q in [0, 100]."""
+        if not self.points:
+            return 0.0
+        vals = sorted(v for _, v in self.points)
+        rank = min(len(vals) - 1, max(0, int(round(q / 100 * (len(vals) - 1)))))
+        return vals[rank]
+
 
 class Registry:
     def __init__(self):
@@ -66,6 +74,15 @@ class Registry:
         with self._lock:
             return {k: s.last for k, s in self._series.items()}
 
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-series stats (count/last/mean/max/total/p50/p99) — the
+        scrape endpoint a serving dashboard (paper §VI) would poll."""
+        with self._lock:
+            return {k: {"count": len(s.points), "last": s.last,
+                        "mean": s.mean, "max": s.max, "total": s.total,
+                        "p50": s.percentile(50), "p99": s.percentile(99)}
+                    for k, s in self._series.items()}
+
     def to_csv(self) -> str:
         lines = ["metric,count,last,mean,max,total"]
         with self._lock:
@@ -74,6 +91,18 @@ class Registry:
                 lines.append(f"{k},{len(s.points)},{s.last:.6g},{s.mean:.6g},"
                              f"{s.max:.6g},{s.total:.6g}")
         return "\n".join(lines)
+
+
+def record_serving_totals(registry: "Registry", useful_tokens: int,
+                          wall_s: float, decode_s: float) -> None:
+    """End-of-run serving gauges, shared by every serving driver so the
+    continuous-vs-static benchmark always compares identical accounting:
+    wall time, useful tokens/s overall, and decode-only tokens/s (omitted
+    when the run never decoded, e.g. stop-length-1 workloads)."""
+    registry.gauge("serve/wall_s", wall_s)
+    registry.gauge("serve/tok_s", useful_tokens / max(wall_s, 1e-9))
+    if decode_s > 0:
+        registry.gauge("serve/decode_tok_s", useful_tokens / decode_s)
 
 
 @dataclass
@@ -111,4 +140,11 @@ def table_one(reports: List[StepReport]) -> str:
     out = [head, sep]
     for name, vals in rows:
         out.append("| " + name + " | " + " | ".join(vals) + " |")
+    # free-form per-step metrics (e.g. serving tokens/s, slot occupancy)
+    # render as additional rows; steps missing a key show "-"
+    extra_keys = sorted({k for r in reports for k in r.extra})
+    for key in extra_keys:
+        vals = [f"{r.extra[key]:.4g}" if key in r.extra else "-"
+                for r in reports]
+        out.append("| " + key + " | " + " | ".join(vals) + " |")
     return "\n".join(out)

@@ -96,6 +96,25 @@ class WorkQueue:
             self._leased.pop(task_id, None)
             return True
 
+    def renew(self, task_id: int, worker: str) -> bool:
+        """Extend the lease on a task the worker is still making progress on.
+
+        Long-running work (a decode loop holding a slot for thousands of
+        steps) outlives any fixed visibility timeout; heartbeating renew()
+        keeps the task from being reclaimed and double-served while the
+        worker is alive, without giving up crash-recovery: a worker that
+        dies stops renewing and the task requeues one timeout later.
+        Returns False (and does not extend) if the lease already expired
+        or was reclaimed by another worker — the caller must drop the task.
+        """
+        now = self._clock()
+        with self._lock:
+            t = self._leased.get(task_id)
+            if t is None or t.worker != worker or t.lease_expiry <= now:
+                return False
+            t.lease_expiry = now + self.lease_timeout
+            return True
+
     def nack(self, task_id: int, worker: str) -> bool:
         """Return a task early (worker noticed it cannot finish)."""
         with self._lock:

@@ -119,10 +119,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
     mem = _mem_dict(compiled)
-    try:
-        cost = dict(compiled.cost_analysis())
-    except Exception:
-        cost = {}
+    cost = hlo_mod.xla_cost(compiled)
     text = compiled.as_text()
     coll = hlo_mod.collective_bytes(text)
     counts = hlo_mod.collective_counts(text)

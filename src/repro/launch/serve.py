@@ -1,18 +1,31 @@
-"""Batched serving driver: continuous prefill + decode over a request queue.
+"""Serving driver: continuous-batching inference over a request queue.
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
-        --smoke --requests 8 --prompt-len 32 --gen 16
+        --smoke --requests 8 --prompt-len 32 --gen 16 --slots 4
 
-Serving shape: requests arrive in a WorkQueue (the paper's job-queue
-pattern); the server batches up to ``--batch`` requests, runs one jitted
-prefill to build the KV/state cache, then steps the jitted serve_step
-(donated cache) for ``--gen`` tokens.  Greedy decoding over the synthetic
-vocab — the point is the runtime, not the text.
+Requests arrive in a WorkQueue (the paper's Redis job-queue pattern); the
+default scheduler is the continuous batcher (repro.serving): a fixed pool
+of decode slots, per-request prefill into a slotted KV/state cache, one
+fused per-slot decode step per iteration, and immediate evict/refill when
+a request hits its stop length — no inter-request barrier.
+
+``--static`` (or ``serve_static``) keeps the legacy drain-then-refill
+batcher: lease a batch, prefill together, decode until the LONGEST request
+in the batch finishes, ack, repeat.  It exists as the baseline the
+serving benchmark (benchmarks/run.py bench_serve) measures continuous
+batching against; short requests idle their decode slots while the
+stragglers run, which is exactly the utilization gap continuous batching
+closes.
+
+Both paths serve the same queue items — dicts with ``id``, ``prompt`` and
+an optional per-request ``max_new_tokens`` — and return
+``(results, metrics)`` with ``results[id]`` the generated tokens.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,19 +33,79 @@ import numpy as np
 
 from repro.configs import registry
 from repro.configs.base import ShapeConfig
-from repro.core.metrics import Registry
+from repro.core.metrics import (Registry, StepReport, record_serving_totals,
+                                table_one)
 from repro.core.queue import WorkQueue
 from repro.launch.mesh import single_device_mesh
 from repro.models import params as pr
 from repro.runtime import steps as steps_mod
+from repro.serving import ServingEngine
+
+
+def make_requests(n_requests: int, prompt_len: int, gen: int, *,
+                  vocab_size: int, seed: int = 0,
+                  gen_lens: Optional[Sequence[int]] = None) -> List[dict]:
+    """Synthetic request stream: random prompts, per-request stop lengths.
+    ``gen_lens`` (cycled) gives a heterogeneous workload; default is the
+    uniform ``gen`` every request."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(n_requests):
+        g = gen if gen_lens is None else int(gen_lens[i % len(gen_lens)])
+        out.append({"id": i,
+                    "prompt": rng.randint(1, vocab_size, prompt_len).tolist(),
+                    "max_new_tokens": g})
+    return out
+
+
+def _request_queue(requests, cfg, *, n_requests, prompt_len, gen, seed,
+                   gen_lens, lease_timeout) -> WorkQueue:
+    if requests is None:
+        requests = make_requests(n_requests, prompt_len, gen,
+                                 vocab_size=cfg.vocab_size, seed=seed,
+                                 gen_lens=gen_lens)
+    return WorkQueue(requests, lease_timeout=lease_timeout)
 
 
 def serve(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
-          gen: int, batch: int = 4, seed: int = 0):
+          gen: int, batch: int = 4, seed: int = 0,
+          gen_lens: Optional[Sequence[int]] = None,
+          lease_timeout: float = 30.0, warmup: bool = False,
+          requests: Optional[Sequence[dict]] = None):
+    """Continuous-batching serve: ``batch`` is the decode-slot pool size.
+
+    Returns ``(results, metrics)``; see module docstring for the request
+    item format and docs/serving.md for the metrics fields.
+    """
     cfg = registry.get_smoke(arch) if smoke else registry.get_config(arch)
     par = registry.get_parallel(arch)
     mesh = single_device_mesh()
-    # cache sized for prompt + generation
+    engine = ServingEngine(cfg, par, mesh, num_slots=batch,
+                           prompt_len=prompt_len, max_new_tokens=gen,
+                           seed=seed)
+    queue = _request_queue(requests, engine.cfg, n_requests=n_requests,
+                           prompt_len=prompt_len, gen=gen, seed=seed,
+                           gen_lens=gen_lens, lease_timeout=lease_timeout)
+    if warmup:
+        with mesh:
+            engine.warmup()
+    return engine.run(queue, default_max_new=gen)
+
+
+def serve_static(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
+                 gen: int, batch: int = 4, seed: int = 0,
+                 gen_lens: Optional[Sequence[int]] = None,
+                 lease_timeout: float = 30.0, warmup: bool = False,
+                 requests: Optional[Sequence[dict]] = None):
+    """Legacy static batcher (benchmark baseline — see module docstring).
+
+    Batches drain-then-refill: each leased batch decodes until its longest
+    request's stop length, then every member is acked and the next batch
+    forms.  Per-request stop lengths are honored by truncation.
+    """
+    cfg = registry.get_smoke(arch) if smoke else registry.get_config(arch)
+    par = registry.get_parallel(arch)
+    mesh = single_device_mesh()
     S = prompt_len + gen
     shape = ShapeConfig("serve", S, batch, "prefill")
     cfg = steps_mod.resolve_cfg(cfg, shape)
@@ -45,17 +118,33 @@ def serve(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
     decode = steps_mod.build_decode(
         cfg, par, mesh, ShapeConfig("serve", S, batch, "decode")).jit()
 
-    rng = np.random.RandomState(seed)
-    queue = WorkQueue(
-        [{"id": i,
-          "prompt": rng.randint(1, cfg.vocab_size, prompt_len).tolist()}
-         for i in range(n_requests)])
+    queue = _request_queue(requests, cfg, n_requests=n_requests,
+                           prompt_len=prompt_len, gen=gen, seed=seed,
+                           gen_lens=gen_lens, lease_timeout=lease_timeout)
 
     T = steps_mod.token_len(cfg, shape) if cfg.family == "audio" else prompt_len
-    results = {}
+    # prefill caches cover only the prompt; splice them into a full-length
+    # cache so decode has real headroom (see cache_prefix_insert)
+    pad_cache = jax.jit(steps_mod.cache_prefix_insert, donate_argnums=0)
+    ex_abs, _ = steps_mod.extras_specs(cfg, batch)
+    extras = ()
+    if ex_abs:
+        extras = ({k: jnp.zeros(v.shape, v.dtype)
+                   for k, v in ex_abs.items()},)
+
+    results: Dict[int, list] = {}
+    t_start = time.perf_counter()
+    decode_s = 0.0
     with mesh:
+        if warmup:
+            dummy = jnp.ones((batch, T), jnp.int32)
+            last, small = prefill(params, dummy, *extras)
+            caches = pad_cache(steps_mod.init_cache(cfg, batch, S), small)
+            tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+            decode(params, caches, tok, jnp.int32(T))
+            t_start = time.perf_counter()
         while not queue.drained():
-            # ---- batch formation
+            # ---- batch formation (drain-then-refill barrier)
             leased = []
             while len(leased) < batch:
                 got = queue.lease("server")
@@ -66,37 +155,60 @@ def serve(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
                 time.sleep(0.001)
                 continue
             prompts = np.ones((batch, T), np.int32)
+            want = [gen] * len(leased)
             for row, (_, req) in enumerate(leased):
                 prompts[row, :len(req["prompt"][:T])] = req["prompt"][:T]
-
-            ex_abs, _ = steps_mod.extras_specs(cfg, batch)
-            extras = ()
-            if ex_abs:
-                extras = ({k: jnp.zeros(v.shape, v.dtype)
-                           for k, v in ex_abs.items()},)
+                want[row] = min(int(req.get("max_new_tokens", gen)), gen)
 
             # ---- prefill -> first token + cache
             t0 = time.perf_counter()
-            last, caches = prefill(params, jnp.asarray(prompts), *extras)
+            last, small = prefill(params, jnp.asarray(prompts), *extras)
+            caches = pad_cache(steps_mod.init_cache(cfg, batch, S), small)
             tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
             metrics.gauge("serve/prefill_s", time.perf_counter() - t0)
 
-            # ---- decode loop (donated cache)
+            # ---- decode loop: the whole batch runs to max(want)
             out_tokens = [np.asarray(tok)]
             t1 = time.perf_counter()
-            for g in range(gen - 1):
+            for g in range(max(want) - 1):
                 tok, caches = decode(params, caches, tok,
                                      jnp.int32(T + g))
                 out_tokens.append(np.asarray(tok))
-            dt = time.perf_counter() - t1
-            metrics.gauge("serve/decode_tok_s",
-                          batch * max(gen - 1, 1) / max(dt, 1e-9))
+            decode_s += time.perf_counter() - t1
 
             gen_tok = np.concatenate(out_tokens, axis=1)
             for row, (tid, req) in enumerate(leased):
-                results[req["id"]] = gen_tok[row].tolist()
+                results[req["id"]] = gen_tok[row, :want[row]].tolist()
                 queue.ack(tid, "server")
+                metrics.inc("serve/completed")
+                metrics.inc("serve/tokens_generated", want[row])
+    wall = time.perf_counter() - t_start
+    record_serving_totals(metrics, sum(len(v) for v in results.values()),
+                          wall, decode_s)
     return results, metrics
+
+
+def serving_report(metrics: Registry, *, step: str = "serve",
+                   devices: int = 1) -> StepReport:
+    """Fold serve metrics into a paper-Table-I-style report column."""
+    s = metrics.summary()
+
+    def g(name, stat="last"):
+        return s.get(name, {}).get(stat, 0.0)
+
+    return StepReport(
+        step=step, pods=1, devices=devices,
+        total_time_s=g("serve/wall_s"),
+        extra={
+            "requests": g("serve/completed", "total"),
+            "tokens": g("serve/tokens_generated", "total"),
+            "tokens/s": g("serve/tok_s"),
+            "decode tokens/s": g("serve/decode_tok_s"),
+            "mean slot occupancy": g("serve/slot_occupancy", "mean"),
+            "p50 latency (s)": g("serve/request_latency_s", "p50"),
+            "p99 latency (s)": g("serve/request_latency_s", "p99"),
+            "p50 ttft (s)": g("serve/ttft_s", "p50"),
+        })
 
 
 def main():
@@ -107,14 +219,27 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
+    ap.add_argument("--static", action="store_true",
+                    help="legacy drain-then-refill batcher (baseline)")
+    ap.add_argument("--spread", action="store_true",
+                    help="heterogeneous stop lengths (gen halved 4x, "
+                         "cycled) — the workload continuous batching "
+                         "wins on")
     args = ap.parse_args()
-    results, metrics = serve(args.arch, smoke=args.smoke,
-                             n_requests=args.requests,
-                             prompt_len=args.prompt_len, gen=args.gen,
-                             batch=args.batch)
-    print(f"[serve] completed {len(results)} requests")
+    gen_lens = None
+    if args.spread:
+        gen_lens = [max(1, args.gen // (2 ** i)) for i in range(4)]
+    fn = serve_static if args.static else serve
+    results, metrics = fn(args.arch, smoke=args.smoke,
+                          n_requests=args.requests,
+                          prompt_len=args.prompt_len, gen=args.gen,
+                          batch=args.slots, gen_lens=gen_lens)
+    mode = "static" if args.static else "continuous"
+    print(f"[serve:{mode}] completed {len(results)} requests")
     print(metrics.to_csv())
+    print()
+    print(table_one([serving_report(metrics, step=f"serve ({mode})")]))
 
 
 if __name__ == "__main__":

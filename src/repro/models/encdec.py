@@ -89,8 +89,8 @@ def _self_block(ctx, p, x, *, causal, mode="train", cache=None, pos=None):
     q, k, v = attn_mod.qkv_proj(ctx, p, h, jnp.arange(x.shape[1]), strategy)
     new_cache = {}
     if mode == "decode":
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, 1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, 1)
+        from repro.models.transformer import insert_kv
+        k_cache, v_cache = insert_kv(cache, k, v, pos)
         out = attn_mod.decode_attention(ctx, q, k_cache, v_cache, pos)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
@@ -157,8 +157,13 @@ def forward(ctx: ModelCtx, params, tokens, *, mode: str = "train",
     B, Td = tokens.shape
     x = jnp.take(params["embed"].astype(cd), tokens, axis=0)
     if mode == "decode":
-        pvec = jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1, 0)
-        x = x + pvec.astype(cd)[None]
+        p = jnp.asarray(pos)
+        if p.ndim == 1:        # per-slot positions (continuous batching)
+            pvec = jnp.take(params["pos_dec"], p, axis=0)[:, None]   # (B,1,D)
+            x = x + pvec.astype(cd)
+        else:
+            pvec = jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1, 0)
+            x = x + pvec.astype(cd)[None]
         enc_out = None
     else:
         x = x + params["pos_dec"].astype(cd)[None, :Td]

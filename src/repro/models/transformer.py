@@ -79,6 +79,26 @@ def _attn_cache_schema(cfg: ModelConfig, B: int, S: int, G: int) -> Dict[str, PS
             "v": PSpec((G, B, S, KV, dh), ax, "zeros")}
 
 
+def insert_kv(cache, k, v, pos):
+    """Write this step's k/v (B,1,KV,dh) into the cache at ``pos``.
+
+    ``pos`` is a scalar (whole-batch decode, all rows at the same position)
+    or a (B,) vector (slot-based continuous batching: every row of the
+    batch is a different request at its own sequence position).  A vector
+    entry >= cache length writes nothing — a free/overflowed slot is a
+    no-op rather than an out-of-bounds clamp.
+    """
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        return k_cache, v_cache
+    S = cache["k"].shape[1]
+    hit = (jnp.arange(S)[None, :] == pos[:, None])[..., None, None]  # (B,S,1,1)
+    return (jnp.where(hit, k, cache["k"]),
+            jnp.where(hit, v, cache["v"]))
+
+
 def _tp_boundary(ctx: ModelCtx, h, mode: str, tag: str):
     """Make the Megatron-SP all-gather an explicit, NAMED value so the
     remat policy (save_only_these_names) can keep it for backward instead
@@ -100,8 +120,7 @@ def attention_part(ctx: ModelCtx, p, x, *, window, mode, positions, cache, pos):
     q, k, v = attn_mod.qkv_proj(ctx, p, h, positions, strategy)
     new_cache = {}
     if mode == "decode":
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        k_cache, v_cache = insert_kv(cache, k, v, pos)
         out = attn_mod.decode_attention(
             ctx, q, k_cache, v_cache, pos, window=window,
             logit_softcap=cfg.attn.logit_softcap)
@@ -272,7 +291,10 @@ def forward(ctx: ModelCtx, params, tokens, *, mode: str = "train",
     if mode == "train" and ctx.par.sequence_parallel:
         x = ctx.cons(x, ("batch", "act_seq_sharded", None))
     if mode == "decode":
-        positions = jnp.reshape(pos, (1,)) + jnp.zeros((1,), jnp.int32)
+        # pos: scalar (whole-batch) or (B,) per-slot positions (continuous
+        # batching) — rope() takes (S,) or (B,S) position grids.
+        p = jnp.asarray(pos)
+        positions = p[:, None] if p.ndim == 1 else jnp.reshape(p, (1,))
     else:
         positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
     x, new_caches, aux = _scan_groups(ctx, params, x, mode=mode,

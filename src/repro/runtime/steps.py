@@ -211,7 +211,17 @@ def build_prefill(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh,
 
 
 def build_decode(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh,
-                 shape: ShapeConfig) -> StepBundle:
+                 shape: ShapeConfig, *, per_slot: bool = False) -> StepBundle:
+    """One fused greedy decode step over the whole batch.
+
+    ``per_slot=False``: classic whole-batch decode — every row sits at the
+    same scalar position ``pos`` (the static drain-then-refill server).
+
+    ``per_slot=True``: continuous-batching decode — ``pos`` is a (B,) int32
+    vector, one sequence position per slot.  Cache writes, RoPE and the
+    causal mask are all per-row, so a single jitted step advances B
+    *independent* requests with no inter-request barrier (repro.serving).
+    """
     cfg = resolve_cfg(cfg, shape)
     mod = _model_module(cfg)
     ctx = ModelCtx(cfg, par, mesh)
@@ -226,7 +236,7 @@ def build_decode(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh,
     cache_shd = sh.shardings_for_schema(cache_schema, mesh, rules)
     tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
     tok_shd = sh.sharding_for((B, 1), ("batch", None), mesh, rules)
-    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((B,) if per_slot else (), jnp.int32)
     pos_shd = NamedSharding(mesh, P())
 
     def serve_step(params, caches, token, pos):
@@ -243,6 +253,75 @@ def build_decode(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh,
         out_shardings=(tok_shd, cache_shd),
         donate_argnums=(1,),
     )
+
+
+def build_slot_decode(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh,
+                      shape: ShapeConfig) -> StepBundle:
+    """Continuous-batching decode step (see build_decode per_slot=True)."""
+    return build_decode(cfg, par, mesh, shape, per_slot=True)
+
+
+# ---------------------------------------------------------------------------
+# slotted KV/state cache: allocation + slot insert/evict
+# ---------------------------------------------------------------------------
+# Every cache leaf in the repo is laid out (layers, batch, ...), so a "slot"
+# is index ``i`` of axis 1 across the whole cache pytree — attention K/V,
+# mamba conv/state, rwkv state and encdec self/cross caches alike.
+
+CACHE_BATCH_AXIS = 1
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int):
+    """Allocate an all-zeros decode cache for B slots of S positions."""
+    mod = _model_module(cfg)
+    abstract = pr.abstract_params(mod.cache_schema(cfg, B, S), cfg.param_dtype)
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), abstract)
+
+
+def cache_batch_insert(dst, src, slot):
+    """Copy a 1-slot cache pytree ``src`` into slot ``slot`` of ``dst``.
+
+    ``src`` leaves may have a shorter sequence axis than ``dst`` (a prefill
+    cache covers only the prompt); the tail of the slot is left as-is and
+    relies on the decode-position mask to stay invisible.  Pure function —
+    jit it with ``donate_argnums=0`` so refills are in-place.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def ins(d, s):
+        start = (jnp.int32(0), slot) + (jnp.int32(0),) * (d.ndim - 2)
+        return jax.lax.dynamic_update_slice(d, s.astype(d.dtype), start)
+
+    return jax.tree.map(ins, dst, src)
+
+
+def cache_prefix_insert(dst, src):
+    """Copy a short-sequence cache pytree into the front of a longer one.
+
+    Prefill emits caches whose sequence axis covers only the prompt;
+    decode needs headroom for the generated tokens.  (The seed's static
+    server skipped this and decoded against the prompt-length cache, so
+    every generated token's K/V write clamped onto the last prompt slot —
+    generations were invisible to attention.)
+    """
+    def ins(d, s):
+        start = (jnp.int32(0),) * d.ndim
+        return jax.lax.dynamic_update_slice(d, s.astype(d.dtype), start)
+
+    return jax.tree.map(ins, dst, src)
+
+
+def cache_batch_evict(dst, slot):
+    """Zero out one slot (hygiene on eviction; correctness never needs it —
+    the next insert overwrites the prompt prefix and masks hide the rest)."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def ev(d):
+        z = jnp.zeros((d.shape[0], 1) + d.shape[2:], d.dtype)
+        start = (jnp.int32(0), slot) + (jnp.int32(0),) * (d.ndim - 2)
+        return jax.lax.dynamic_update_slice(d, z, start)
+
+    return jax.tree.map(ev, dst)
 
 
 def build_step(cfg, par, ocfg, mesh, shape: ShapeConfig) -> StepBundle:

@@ -1,0 +1,11 @@
+"""Continuous-batching distributed inference (paper §III/§V serving step).
+
+Split host/device: ``scheduler`` is the deterministic slot/lease policy
+(no jax — testable with a fake clock), ``engine`` owns the jitted prefill,
+slotted cache and fused per-slot decode step.  ``repro.launch.serve`` is
+the CLI driver; docs/serving.md is the usage guide.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import ContinuousScheduler, Request, Slot
+
+__all__ = ["ServingEngine", "ContinuousScheduler", "Request", "Slot"]

@@ -1,0 +1,194 @@
+"""Continuous-batching serving engine (the device side).
+
+The ContinuousScheduler (scheduler.py) decides *which* requests occupy
+which decode slots; this engine owns everything jitted:
+
+  * a B=1 prefill step — each admitted request is prefilled alone and its
+    prompt-length KV/state cache is spliced into its slot of the big cache
+    (runtime.steps.cache_batch_insert, donated so the splice is in-place);
+  * one fused per-slot decode step (runtime.steps.build_slot_decode) that
+    advances ALL active slots one token per call, each at its own sequence
+    position — a request admitted mid-flight rides the very next step;
+  * the slotted cache itself: every cache leaf is (layers, slots, ...), so
+    slot i is row i of axis 1 across attention K/V, mamba conv/state and
+    encdec caches alike.
+
+Request lifecycle (see docs/architecture.md for the full diagram):
+
+    queue --lease--> slot --prefill+insert--> decode step xN --evict/ack-->
+      ^                                                          |
+      '----------------- slot freed, next request refills <------'
+
+The engine is deterministic given a queue and a clock; ``smoke``-size
+configs run it on CPU in seconds (tests/test_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.core.metrics import Registry, record_serving_totals
+from repro.core.queue import WorkQueue
+from repro.models import params as pr
+from repro.runtime import steps as steps_mod
+from repro.serving.scheduler import ContinuousScheduler
+
+
+class ServingEngine:
+    """Owns params, jitted steps and the slotted cache for one model.
+
+    Parameters
+    ----------
+    cfg, par, mesh:
+        Model / parallelism config and the device mesh to serve on.
+    num_slots:
+        Decode-slot pool size == batch dim of the fused decode step.
+    prompt_len:
+        Fixed prompt pad length.  Prompts shorter than this are padded
+        (token id 1), longer ones truncated — one prefill compilation.
+    max_new_tokens:
+        Cache headroom per slot: a slot can decode at most this many
+        tokens (requests asking for more are clamped at admission).
+    params:
+        Optional pre-initialised params (e.g. restored from a
+        checkpoint); randomly initialised from ``seed`` if omitted.
+    """
+
+    def __init__(self, cfg: ModelConfig, par: ParallelConfig, mesh, *,
+                 num_slots: int = 4, prompt_len: int = 32,
+                 max_new_tokens: int = 16, seed: int = 0, params=None,
+                 registry: Optional[Registry] = None, clock=time.monotonic):
+        self.mesh = mesh
+        self.num_slots = num_slots
+        self.max_new_tokens = max_new_tokens
+        self.metrics = registry if registry is not None else Registry()
+        self.clock = clock
+
+        S = prompt_len + max_new_tokens
+        shape = ShapeConfig("serve", S, num_slots, "decode")
+        self.cfg = cfg = steps_mod.resolve_cfg(cfg, shape)
+        if cfg.family == "audio":
+            # enc-dec: the decoder-position table IS the self-attn cache
+            # (cache_schema sizes it to decoder_len regardless of S), so
+            # prompt + generation must fit inside decoder_len — pad the
+            # prompt short enough to leave max_new_tokens of headroom
+            self.prompt_pad = max(1, min(prompt_len,
+                                         cfg.decoder_len - max_new_tokens))
+            self.cache_len = cfg.decoder_len
+        else:
+            self.prompt_pad = prompt_len
+            self.cache_len = S
+
+        mod = steps_mod._model_module(cfg)
+        if params is None:
+            params = pr.init_params(mod.lm_schema(cfg), jax.random.key(seed),
+                                    cfg.param_dtype)
+        self.params = params
+        prefill_fn = steps_mod.build_prefill(
+            cfg, par, mesh, ShapeConfig("serve", S, 1, "prefill")).fn
+
+        # prefill + slot splice + argmax fused into ONE dispatch per
+        # admission — admission cost is on the serving critical path
+        # (every refill happens between fused decode steps)
+        def prefill_insert(params, caches, prompt, slot, *extras):
+            last, small = prefill_fn(params, prompt, *extras)
+            caches = steps_mod.cache_batch_insert(caches, small, slot)
+            return jnp.argmax(last[0], -1).astype(jnp.int32), caches
+
+        self._prefill_insert = jax.jit(prefill_insert, donate_argnums=1)
+        self._decode = steps_mod.build_slot_decode(cfg, par, mesh, shape).jit()
+        self._caches = steps_mod.init_cache(cfg, num_slots, S)
+        ex_abs, _ = steps_mod.extras_specs(cfg, 1)
+        self._extras = (({k: jnp.zeros(v.shape, v.dtype)
+                          for k, v in ex_abs.items()},) if ex_abs else ())
+
+    # ----------------------------------------------------------- jit steps
+    def _pad_prompt(self, prompt) -> np.ndarray:
+        row = np.ones((1, self.prompt_pad), np.int32)
+        toks = list(prompt)[:self.prompt_pad]
+        row[0, :len(toks)] = toks
+        return row
+
+    def prefill_into(self, slot_index: int, prompt) -> int:
+        """Prefill one request alone and splice its cache into the slot.
+        Returns the first generated token."""
+        t0 = time.perf_counter()
+        first, self._caches = self._prefill_insert(
+            self.params, self._caches,
+            jnp.asarray(self._pad_prompt(prompt)), jnp.int32(slot_index),
+            *self._extras)
+        first = int(first)
+        self.metrics.gauge("serve/prefill_s", time.perf_counter() - t0)
+        return first
+
+    def decode_step(self, tokens, positions) -> np.ndarray:
+        """One fused greedy step over all slots.  ``tokens``/``positions``
+        are per-slot (num_slots,) host lists; returns the new tokens."""
+        tok = jnp.asarray(np.asarray(tokens, np.int32)[:, None])
+        pos = jnp.asarray(np.asarray(positions, np.int32))
+        out, self._caches = self._decode(self.params, self._caches, tok, pos)
+        return np.asarray(out)[:, 0]
+
+    def warmup(self) -> None:
+        """Compile the three jitted paths (prefill, insert, decode) off the
+        clock.  Two rounds: the first insert sees the freshly allocated
+        (uncommitted) cache, every later one sees a jit-output cache — a
+        different sharding signature, so one round would leave the second
+        compile on the serving clock.  Touches only slot 0, which the
+        first admission overwrites."""
+        for _ in range(2):
+            self.prefill_into(0, [1] * self.prompt_pad)
+            self.decode_step([0] * self.num_slots, [0] * self.num_slots)
+
+    # ----------------------------------------------------------- main loop
+    def run(self, queue: WorkQueue, *, worker: str = "server",
+            default_max_new: Optional[int] = None, idle_wait: float = 1e-3,
+            ) -> Tuple[Dict[Any, list], Registry]:
+        """Serve the queue to exhaustion with continuous batching.
+
+        Admission, eviction and lease heartbeats happen between fused
+        decode steps; a request that finishes early frees its slot for the
+        next queued request immediately (no drain-then-refill barrier).
+        Returns ``(results, metrics)`` with ``results[rid]`` the generated
+        tokens (length == the request's stop length).
+        """
+        cap = self.cache_len - self.prompt_pad
+        sched = ContinuousScheduler(
+            queue, self.num_slots, worker=worker, registry=self.metrics,
+            clock=self.clock,
+            default_max_new=min(default_max_new or self.max_new_tokens, cap))
+        t_start = time.perf_counter()
+        decode_s = 0.0
+        with self.mesh:
+            while True:
+                for slot in sched.admit():
+                    # engine capacity bounds the stop length: past
+                    # prompt_pad+cap the cache has no row to write
+                    if slot.request.max_new_tokens > cap:
+                        slot.request = dataclasses.replace(
+                            slot.request, max_new_tokens=cap)
+                    first = self.prefill_into(slot.index, slot.request.prompt)
+                    sched.start(slot, first, self.prompt_pad)
+                if not sched.active():
+                    if sched.finished():
+                        break
+                    time.sleep(idle_wait)   # queue momentarily empty
+                    continue
+                t0 = time.perf_counter()
+                toks = self.decode_step(sched.last_tokens(),
+                                        sched.positions())
+                decode_s += time.perf_counter() - t0
+                sched.observe(toks)
+                sched.renew_leases()
+        wall = time.perf_counter() - t_start
+        results = sched.results()
+        record_serving_totals(self.metrics,
+                              sum(len(v) for v in results.values()),
+                              wall, decode_s)
+        return results, self.metrics

@@ -3,6 +3,7 @@ flood-fill, hypothesis-generated masks), object stats, FFN learning, and
 the 4-step workflow end to end (with resume)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="optional dev dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -7,6 +7,10 @@ queue.
 """
 import itertools
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency "
+                                         "(requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.queue import WorkQueue, run_workers

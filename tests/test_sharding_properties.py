@@ -3,6 +3,7 @@ produce non-divisible shardings, never reuse a mesh axis, and degrade to
 replication on axes absent from the mesh."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="optional dev dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax
