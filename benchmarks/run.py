@@ -201,6 +201,48 @@ def bench_serve(fast: bool):
         f"speedup={c['serve/tok_s'] / max(s['serve/tok_s'], 1e-9):.2f}")
 
 
+def bench_elastic_churn(fast: bool):
+    """Elastic recovery cost across an injected kill/rejoin schedule.
+
+    Runs ``examples/elastic_failover.py`` (8 forced host devices, 2 killed
+    mid-run, later rejoining) in a subprocess — the device count is an XLA
+    flag that must be set before jax initializes, so it cannot run in this
+    process — and parses its ``CHURN_REPORT`` json: overall tokens/s with
+    every recovery (restore + recompile + re-executed steps) on the clock,
+    steps lost to the failure, and wall-seconds from node death to the
+    first step completed on the reshaped mesh.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, os.path.join(root, "examples",
+                                        "elastic_failover.py")]
+    if fast:
+        cmd.append("--fast")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"elastic churn bench failed:\n{out.stdout}"
+                           f"\n{out.stderr}")
+    rep = next(json.loads(l.split(" ", 1)[1]) for l in out.stdout.splitlines()
+               if l.startswith("CHURN_REPORT "))
+    steps = rep["steps"]
+    row("elastic_churn_train", rep["total_wall_s"] / steps * 1e6,
+        f"tok_s={rep['tokens_per_s']:.1f};recoveries={rep['recoveries']}")
+    recovery = (sum(rep["recovery_s"]) / len(rep["recovery_s"])
+                if rep["recovery_s"] else 0.0)
+    overhead = rep["tokens_executed"] / max(
+        steps * rep["global_batch"] * rep["seq_len"], 1) - 1.0
+    row("elastic_churn_recovery", recovery * 1e6,
+        f"steps_lost={rep['steps_lost']};reexec_overhead={overhead:.1%}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -212,6 +254,7 @@ def main() -> None:
     bench_inference_scaling(args.fast)
     bench_lm_train(args.fast)
     bench_serve(args.fast)
+    bench_elastic_churn(args.fast)
     print(f"\n# {len(ROWS)} benchmark rows")
 
 

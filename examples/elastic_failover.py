@@ -1,122 +1,109 @@
-"""Fault tolerance + elastic scaling demo (paper §V: "nodes can join and
-leave the cluster at any time").
+"""Self-healing elastic training demo (paper §V: "nodes can join and leave
+the cluster at any time").
 
-Scenario, on a simulated 8-device cluster (XLA host devices):
-  1. train on a (4 data, 2 model) mesh with periodic checkpoints;
-  2. two "nodes" FAIL -> only 6 devices remain; the elastic planner keeps
-     the model axis (structural) and shrinks the data axis: new mesh (2, 2);
-  3. state is restored from the checkpoint onto the NEW mesh (the
-     checkpointer is mesh-agnostic) and training continues;
-  4. the nodes come back -> scale up to (4, 2) again.
+Unlike the seed version of this example — which drove every phase by hand
+(fail nodes, build mesh, restore, run a segment, repeat) — ALL the control
+here lives in ``repro.elastic.ElasticTrainer``.  The script only injects a
+churn schedule against the cluster, exactly like an unplugged appliance
+would:
 
-    PYTHONPATH=src python examples/elastic_failover.py
+  1. training starts on a (4 data, 2 model) mesh over 8 simulated nodes;
+  2. two nodes FAIL mid-run: the cluster drains their pods, the trainer
+     restores the latest checkpoint onto a (2, 2) mesh and DOUBLES gradient
+     accumulation so the global batch is unchanged;
+  3. the nodes REJOIN: the trainer preempts gracefully (checkpointing) and
+     scales back up to (4, 2), accumulation relaxing to 1.
+
+Asserts, with no manual intervention anywhere: the run reaches its final
+step, every mesh shape kept batch x accum constant, there is a loss value
+for every step, and the loss improved end-to-end.  Emits a
+``CHURN_REPORT {json}`` line consumed by ``benchmarks/run.py`` (recovery
+cost in tokens/s and steps lost is *measured*, not asserted).
+
+    PYTHONPATH=src python examples/elastic_failover.py [--fast]
 """
 import os
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=8").strip()
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8").strip()
 
-import tempfile  # noqa: E402
+import argparse   # noqa: E402
+import json       # noqa: E402
+import threading  # noqa: E402
+import time       # noqa: E402
 
-import jax  # noqa: E402
+import jax        # noqa: E402
 
-from repro.checkpoint.checkpoint import Checkpointer  # noqa: E402
-from repro.configs import registry  # noqa: E402
-from repro.configs.base import OptimizerConfig, ShapeConfig  # noqa: E402
-from repro.core.elastic import make_elastic_mesh, rescale_plan  # noqa: E402
-from repro.core.orchestrator import Cluster  # noqa: E402
-from repro.data.objectstore import ObjectStore  # noqa: E402
-from repro.data.tokens import TokenPipeline  # noqa: E402
-from repro.models import params as pr  # noqa: E402
-from repro.optim import adamw  # noqa: E402
-from repro.runtime import steps as steps_mod  # noqa: E402
-from repro.sharding import specs as sh  # noqa: E402
-
-
-def run_segment(cfg, par, ocfg, mesh, state, start, n_steps, pipe, ckpt,
-                schema, opt_schema):
-    rules = sh.logical_rules(par)
-    shape = ShapeConfig("t", 64, 8, "train")
-    bundle = steps_mod.build_train(cfg, par, ocfg, mesh, shape)
-    step_fn = bundle.jit()
-    params, opt = state
-    with mesh:
-        for i in range(start, start + n_steps):
-            params, opt, m = step_fn(params, opt, pipe.batch(i))
-            if (i + 1) % 5 == 0:
-                ckpt.save(i, {"params": params, "opt": opt})
-        print(f"  steps {start}..{start + n_steps - 1}: "
-              f"loss {float(m['loss']):.4f} on mesh {dict(mesh.shape)}")
-    return (params, opt), start + n_steps
+from repro.configs import registry                       # noqa: E402
+from repro.configs.base import OptimizerConfig           # noqa: E402
+from repro.core.orchestrator import Cluster              # noqa: E402
+from repro.elastic import ElasticTrainer, ElasticTrainSpec  # noqa: E402
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="shorter run (CI churn smoke / benchmark)")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+    steps = args.steps or (24 if args.fast else 45)
+    fail_after = steps // 4          # churn points, in completed steps
+    rejoin_after = steps // 2
+
     arch = "phi4-mini-3.8b"
     cfg = registry.get_smoke(arch)
     par = registry.get_parallel(arch)
-    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=2, decay_steps=100)
-    shape = ShapeConfig("t", 64, 8, "train")
-    cfg = steps_mod.resolve_cfg(cfg, shape)
-    mod = steps_mod._model_module(cfg)
-    schema = mod.lm_schema(cfg)
-    opt_schema = adamw.opt_state_schema(schema, ocfg)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=2, decay_steps=200)
 
     cluster = Cluster(devices=jax.devices())
-    store = ObjectStore(tempfile.mkdtemp(prefix="elastic-"))
-    ckpt = Checkpointer(store, keep=2)
-    pipe = TokenPipeline(cfg.vocab_size, 64, 8, seed=3)
+    assert len(cluster.devices) == 8, "expected 8 forced host devices"
+    spec = ElasticTrainSpec(
+        cfg, par, ocfg, steps=steps, seq_len=64, global_batch=16,
+        base_shape=(4, 2), ckpt_every=3 if args.fast else 5,
+        log_every=5, rejoin_timeout_s=120.0)
+    trainer = ElasticTrainer(cluster, spec)
 
-    def abstract():
-        return {"params": pr.abstract_params(schema, cfg.param_dtype),
-                "opt": pr.abstract_params(opt_schema, "float32")}
+    victims = jax.devices()[6:]
 
-    def shardings(mesh):
-        rules = sh.logical_rules(par)
-        return {"params": sh.shardings_for_schema(schema, mesh, rules),
-                "opt": sh.shardings_for_schema(opt_schema, mesh, rules)}
+    def inject_churn():
+        """The outside world: two nodes die, then come back."""
+        while trainer.progress < fail_after:
+            time.sleep(0.02)
+        print(f">>> churn: unplugging {len(victims)} nodes")
+        for d in victims:
+            cluster.fail_node(d)
+        while trainer.progress < rejoin_after:
+            time.sleep(0.02)
+        print(f">>> churn: {len(victims)} nodes rejoin")
+        for d in victims:
+            cluster.join_node(d)
 
-    # --- phase 1: full cluster (4 data x 2 model)
-    plan = rescale_plan(("data", "model"), (4, 2), len(cluster.online_devices))
-    mesh = make_elastic_mesh(plan, cluster.online_devices)
-    rules = sh.logical_rules(par)
-    with mesh:
-        params = jax.jit(lambda k: pr.init_params(schema, k, cfg.param_dtype),
-                         out_shardings=shardings(mesh)["params"])(jax.random.key(0))
-        opt = jax.jit(lambda: pr.init_params(opt_schema, jax.random.key(1),
-                                             "float32"),
-                      out_shardings=shardings(mesh)["opt"])()
-    print("phase 1: healthy cluster")
-    state, step = run_segment(cfg, par, ocfg, mesh, (params, opt), 0, 10,
-                              pipe, ckpt, schema, opt_schema)
+    churn = threading.Thread(target=inject_churn, daemon=True)
+    churn.start()
+    out = trainer.run()
+    churn.join(timeout=10)
+    report = out["report"]
 
-    # --- phase 2: two nodes fail -> shrink data axis, restore, continue
-    for d in jax.devices()[6:]:
-        cluster.fail_node(d)
-    print(f"phase 2: {len(cluster.offline)} nodes failed "
-          f"({len(cluster.online_devices)} online) -> re-mesh + restore")
-    plan = rescale_plan(("data", "model"), (4, 2), len(cluster.online_devices))
-    assert plan.new_shape == (2, 2), plan
-    mesh2 = make_elastic_mesh(plan, cluster.online_devices)
-    restored, meta = ckpt.restore_latest(abstract(), shardings(mesh2))
-    state = (restored["params"], restored["opt"])
-    state, step = run_segment(cfg, par, ocfg, mesh2, state,
-                              int(meta["step"]) + 1, 10, pipe, ckpt,
-                              schema, opt_schema)
+    # --- the §V contract, checked end to end -----------------------------
+    losses = out["loss_by_step"]
+    assert sorted(losses) == list(range(steps)), "missing per-step losses"
+    assert report.global_batch_constant, \
+        "global batch (batch x accum) changed across mesh shapes"
+    shapes = [s.mesh_shape for s in report.segments]
+    assert (2, 2) in shapes, f"never trained on the shrunk mesh: {shapes}"
+    assert shapes[-1] == (4, 2), f"never scaled back up: {shapes}"
+    assert report.recoveries >= 1, "node failure was not recovered"
+    accums = {s.mesh_shape: s.accum_steps for s in report.segments}
+    assert accums[(2, 2)] == 2 * accums[(4, 2)], accums
+    assert out["losses"][-1] < out["losses"][0], "loss did not improve"
 
-    # --- phase 3: nodes rejoin -> scale back up
-    for d in jax.devices()[6:]:
-        cluster.join_node(d)
-    print("phase 3: nodes rejoined -> scale up")
-    plan = rescale_plan(("data", "model"), (2, 2), len(cluster.online_devices))
-    assert plan.new_shape == (4, 2), plan
-    mesh3 = make_elastic_mesh(plan, cluster.online_devices)
-    restored, meta = ckpt.restore_latest(abstract(), shardings(mesh3))
-    state = (restored["params"], restored["opt"])
-    state, step = run_segment(cfg, par, ocfg, mesh3, state,
-                              int(meta["step"]) + 1, 10, pipe, ckpt,
-                              schema, opt_schema)
-    print("OK: trained across failure, shrink, and re-grow "
-          f"(final step {step - 1})")
+    print("CHURN_REPORT " + json.dumps(report.to_json()))
+    print(f"OK: self-healed across fail({fail_after})/rejoin({rejoin_after}) "
+          f"churn — {report.recoveries} recovery, "
+          f"{report.steps_lost} steps lost, "
+          f"{report.tokens_per_s:,.0f} tokens/s overall "
+          f"(final step {steps - 1}, mesh history {shapes})")
 
 
 if __name__ == "__main__":

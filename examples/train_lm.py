@@ -41,11 +41,11 @@ def main():
               ckpt_every=25, cfg_override=cfg)
 
     if args.resume_demo:
-        try:
-            train(cfg.name, fail_at=min(45, steps // 2), **kw)
-        except RuntimeError as e:
-            print(f"[demo] crashed as injected: {e}")
-        print("[demo] restarting — auto-resume from latest checkpoint")
+        # one injected crash mid-run: the elastic supervisor restores from
+        # the latest checkpoint and finishes WITHIN this same call
+        kw = dict(kw, fail_at=min(45, steps // 2))
+        print("[demo] training with an injected crash — the supervisor "
+              "auto-resumes from the latest checkpoint")
     out = train(cfg.name, **kw)
     losses = out["losses"]
     print(f"final: first-loss {losses[0]:.3f} last-loss {losses[-1]:.3f}")

@@ -35,8 +35,15 @@ def _flatten_with_paths(tree):
 
 
 class Checkpointer:
+    """``keep`` semantics: ``keep=N`` (N>=1) retains the newest N checkpoints
+    after every save; ``keep=0`` retains NOTHING (every checkpoint is deleted
+    by the GC pass that follows its own save — useful when a run only wants
+    the side effects of saving, e.g. mirroring to another store); ``keep=None``
+    disables GC entirely.  The seed treated ``keep=0`` as "GC off", which is
+    what ``keep=None`` now means."""
+
     def __init__(self, store: ObjectStore, prefix: str = "checkpoints",
-                 keep: int = 3):
+                 keep: Optional[int] = 3):
         self.store = store
         self.prefix = prefix
         self.keep = keep
@@ -93,11 +100,41 @@ class Checkpointer:
             raise err
 
     def _gc(self) -> None:
+        if self.keep is None:
+            return
         steps = self.all_steps()
-        for s in steps[:-self.keep] if self.keep else []:
+        for s in steps[:-self.keep] if self.keep > 0 else steps:
             base = self._step_dir(s)
-            for key in self.store.list(base):
+            # Delete MANIFEST.json FIRST — the mirror of save()'s write-last
+            # commit rule.  A reader racing this GC either sees the manifest
+            # (and therefore every shard it names, since none are deleted
+            # yet) or sees no manifest and skips the step entirely.  The
+            # seed deleted in store.list order, so a racing restore could
+            # read a manifest whose shards were already gone.
+            self.store.delete(f"{base}/MANIFEST.json")
+            for key in self.store.list(base + "/"):
                 self.store.delete(key)
+        # Orphan sweep: a GC pass killed between the manifest delete and
+        # the shard deletes leaves shards that all_steps() can never see
+        # again.  Sweep manifest-less step dirs OLDER than the newest
+        # committed step only — a crashed or in-flight save writes shards
+        # before its manifest at a NEWER step and must stay untouched.
+        if not steps:
+            return
+        newest = steps[-1]
+        on_disk = set()
+        plen = len(self.prefix) + 1
+        for key in self.store.list(self.prefix + "/"):
+            name = key[plen:].split("/", 1)[0]
+            if name.startswith("step_"):
+                try:
+                    on_disk.add(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        for s in on_disk - set(steps):
+            if s < newest:
+                for key in self.store.list(self._step_dir(s) + "/"):
+                    self.store.delete(key)
 
     # -------------------------------------------------------------- restore
     def all_steps(self) -> List[int]:
@@ -138,10 +175,26 @@ class Checkpointer:
         return jax.tree_util.tree_unflatten(treedef, out)
 
     def restore_latest(self, abstract_tree: Any,
-                       shardings: Optional[Any] = None):
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        manifest = self.store.get_json(f"{self._step_dir(step)}/MANIFEST.json")
-        return self.restore(step, abstract_tree, shardings), \
-            {"step": step, **manifest.get("extra", {})}
+                       shardings: Optional[Any] = None, *,
+                       retries: int = 4):
+        """Restore the newest checkpoint, tolerating a concurrent writer.
+
+        Manifest-first GC deletion guarantees a manifest always names live
+        shards *at any instant*, but a reader whose restore spans a GC pass
+        can still lose the step it picked — on FileNotFound it re-lists and
+        retries on whatever is newest then (a newer save has always
+        committed before GC collects an older step, so progress is
+        guaranteed)."""
+        err: Optional[BaseException] = None
+        for _ in range(retries + 1):
+            step = self.latest_step()
+            if step is None:
+                return None, None
+            try:
+                manifest = self.store.get_json(
+                    f"{self._step_dir(step)}/MANIFEST.json")
+                return self.restore(step, abstract_tree, shardings), \
+                    {"step": step, **manifest.get("extra", {})}
+            except FileNotFoundError as e:   # lost a GC race; re-list
+                err = e
+        raise err

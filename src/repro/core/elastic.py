@@ -33,12 +33,14 @@ class RescalePlan:
 
 
 def rescale_plan(axes: Tuple[str, ...], old_shape: Tuple[int, ...],
-                 n_devices: int) -> RescalePlan:
+                 n_devices: int, *,
+                 max_data: Optional[int] = None) -> RescalePlan:
     """Largest mesh for `n_devices` keeping every non-data axis fixed.
 
     The data axis absorbs the change (standard elastic-DP policy); if fewer
     devices than one model replica exist, raise — that cluster cannot host
-    the model at all.
+    the model at all.  ``max_data`` caps the data axis (e.g. a launcher that
+    wants a fixed single-device layout regardless of spare devices).
     """
     i = axes.index("data")
     fixed = int(np.prod([s for j, s in enumerate(old_shape) if j != i]))
@@ -48,6 +50,8 @@ def rescale_plan(axes: Tuple[str, ...], old_shape: Tuple[int, ...],
     new_data = n_devices // fixed
     # keep power-of-two data axis for even batch sharding
     new_data = 1 << (new_data.bit_length() - 1)
+    if max_data is not None:
+        new_data = min(new_data, max_data)
     new_shape = tuple(new_data if j == i else s
                       for j, s in enumerate(old_shape))
     used = fixed * new_data

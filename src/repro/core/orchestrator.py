@@ -8,14 +8,20 @@ Kubernetes semantics reproduced:
     themselves create and run pods ... re-spawn them if any errors occur";
   * namespaces: virtual sub-clusters with device quotas and isolation —
     two namespaces share hardware but not scheduling headroom (§IV);
-  * nodes joining/leaving: device slices are leased from the cluster; a
-    NodeFailure drains the affected pods and the controller reschedules
-    them elsewhere (§V), which pairs with checkpoint auto-resume in
-    repro.checkpoint for full fault tolerance.
+  * device leases: a pod owns its devices from allocation until it reaches
+    a terminal state; two live pods can never hold the same device, and a
+    finished (or drained) pod returns quota to its namespace;
+  * nodes joining/leaving: a NodeFailure drains the pods running on the
+    failed device — they go FAILED, their leases are released, and the
+    reconciler reschedules them onto fresh devices (§V), which pairs with
+    checkpoint auto-resume in repro.checkpoint for full fault tolerance.
 
 Pods run python callables in threads (this container is one host); on a real
 TPU fleet each pod is a host process pinned to its mesh slice — the Job/Pod
-API is identical, which is the point.
+API is identical, which is the point.  Threads cannot be killed, so a drain
+sets ``PodCtx.stop`` — long-running pod fns (e.g. repro.elastic's training
+segments) poll it to exit cooperatively; the pod's *state* flips to FAILED
+immediately either way.
 """
 from __future__ import annotations
 
@@ -51,6 +57,11 @@ class PodCtx:
     devices: List[Any]
     metrics: Registry
     attempt: int = 0
+    stop: threading.Event = field(default_factory=threading.Event)
+
+    def should_stop(self) -> bool:
+        """Cooperative drain signal (set on NodeFailure / preemption)."""
+        return self.stop.is_set()
 
 
 @dataclass
@@ -63,6 +74,10 @@ class Pod:
     result: Any = None
     error: Optional[str] = None
     thread: Optional[threading.Thread] = None
+    # internal bookkeeping: `gen` fences stale run() threads after a drain +
+    # respawn; `holds_devices` makes lease release idempotent.
+    gen: int = 0
+    holds_devices: bool = False
 
 
 @dataclass
@@ -105,9 +120,11 @@ class Cluster:
         self._lock = threading.Lock()
         self.devices = list(devices)
         self.offline: set = set()
+        self.leased: set = set()
         self.namespaces: Dict[str, Namespace] = {}
         self.jobs: List[Job] = []
         self.metrics = metrics or Registry()
+        self._watchers: List[Callable[[str, Any], None]] = []
 
     # ------------------------------------------------------------ namespaces
     def create_namespace(self, name: str, device_quota: Optional[int] = None,
@@ -120,48 +137,95 @@ class Cluster:
             self.namespaces[name] = ns
             return ns
 
-    def _allocate(self, ns: Namespace, n: int) -> List[Any]:
-        avail = [d for d in self.devices if d not in self.offline]
+    def _allocate_locked(self, ns: Namespace, n: int) -> List[Any]:
+        """Lease `n` devices to a pod.  Caller holds self._lock.
+
+        Devices already leased to a live pod are excluded — the seed's
+        ``avail[:n]`` handed the same devices to every concurrent pod.
+        """
+        avail = [d for d in self.devices
+                 if d not in self.offline and d not in self.leased]
         if ns.used_devices + n > ns.device_quota:
             raise RuntimeError(
                 f"namespace {ns.name}: quota exceeded "
                 f"({ns.used_devices}+{n} > {ns.device_quota})")
         if n > len(avail):
             raise RuntimeError(f"cluster: {n} devices requested, "
-                               f"{len(avail)} online")
+                               f"{len(avail)} free")
+        take = avail[:n]
+        self.leased.update(take)
         ns.used_devices += n
-        return avail[:n]
+        return take
 
-    def _release(self, ns: Namespace, n: int) -> None:
-        ns.used_devices = max(0, ns.used_devices - n)
+    def _release_pod_locked(self, pod: Pod) -> None:
+        """Return a pod's lease (devices + namespace quota).  Idempotent."""
+        if not pod.holds_devices:
+            return
+        pod.holds_devices = False
+        ns = self.namespaces[pod.ctx.namespace]
+        for d in pod.ctx.devices:
+            self.leased.discard(d)
+        ns.used_devices = max(0, ns.used_devices - len(pod.ctx.devices))
 
     # ----------------------------------------------------------------- jobs
     def submit(self, namespace: str, spec: JobSpec) -> Job:
         ns = self.namespaces[namespace]
         job = Job(spec, namespace)
         with self._lock:
+            pods: List[Pod] = []
+            try:
+                for i in range(spec.replicas):
+                    devs = self._allocate_locked(ns, spec.devices_per_pod) \
+                        if spec.devices_per_pod else []
+                    ctx = PodCtx(pod_id=f"{spec.name}-{i}",
+                                 namespace=namespace, devices=devs,
+                                 metrics=self.metrics)
+                    pod = Pod(ctx.pod_id, spec.fn, ctx)
+                    pod.holds_devices = bool(devs)
+                    pods.append(pod)
+            except Exception:
+                for p in pods:           # all-or-nothing: undo partial leases
+                    self._release_pod_locked(p)
+                raise
+            job.pods.extend(pods)
             self.jobs.append(job)
-        for i in range(spec.replicas):
-            devs = self._allocate(ns, spec.devices_per_pod) \
-                if spec.devices_per_pod else []
-            ctx = PodCtx(pod_id=f"{spec.name}-{i}", namespace=namespace,
-                         devices=devs, metrics=self.metrics)
-            job.pods.append(Pod(ctx.pod_id, spec.fn, ctx))
         for pod in job.pods:
             self._start_pod(pod)
         return job
 
     def _start_pod(self, pod: Pod) -> None:
+        with self._lock:
+            pod.gen += 1
+            gen = pod.gen
+
         def run():
-            pod.state = PodState.RUNNING
+            with self._lock:
+                # superseded (respawned) or drained while still PENDING
+                if pod.gen != gen or pod.state != PodState.PENDING:
+                    return
+                pod.state = PodState.RUNNING
             self.metrics.inc(f"pods_running/{pod.ctx.namespace}")
             try:
-                pod.result = pod.fn(pod.ctx)
-                pod.state = PodState.SUCCEEDED
-            except Exception as e:   # reconciler may respawn
-                pod.error = f"{e}\n{traceback.format_exc()}"
-                pod.state = PodState.FAILED
-                self.metrics.inc(f"pod_failures/{pod.ctx.namespace}")
+                result, err = pod.fn(pod.ctx), None
+            except Exception as e:       # reconciler may respawn
+                result = None
+                err = f"{e}\n{traceback.format_exc()}"
+            with self._lock:
+                if pod.gen != gen:       # a respawned attempt owns the pod now
+                    return
+                if err is None:
+                    pod.result = result
+                    # a drained pod may still finish cooperatively — keep the
+                    # result (e.g. its "preempted at step k" marker) but do
+                    # not resurrect the FAILED state fail_node assigned.
+                    if pod.state == PodState.RUNNING:
+                        pod.state = PodState.SUCCEEDED
+                else:
+                    if pod.state == PodState.RUNNING:
+                        pod.error = err
+                        pod.state = PodState.FAILED
+                        self.metrics.inc(f"pod_failures/{pod.ctx.namespace}")
+                self._release_pod_locked(pod)   # terminal -> return the lease
 
         pod.thread = threading.Thread(target=run, name=pod.pod_id)
         pod.thread.start()
@@ -170,18 +234,37 @@ class Cluster:
     def reconcile(self) -> int:
         """One controller pass: respawn failed pods under the backoff limit.
 
-        Returns the number of pods respawned.
+        A respawn re-allocates devices — the failed attempt's lease was
+        released at terminal state and its devices may since have gone
+        offline.  If the cluster cannot satisfy the allocation right now
+        (quota or free devices), the pod stays FAILED and the next pass
+        retries.  Returns the number of pods respawned.
         """
         respawned = 0
         for job in self.jobs:
             for pod in job.pods:
-                if pod.state == PodState.FAILED and \
-                        pod.restarts < job.spec.backoff_limit:
+                with self._lock:
+                    if not (pod.state == PodState.FAILED and
+                            pod.restarts < job.spec.backoff_limit):
+                        continue
+                    self._release_pod_locked(pod)   # no-op unless drained
+                    ns = self.namespaces[job.namespace]
+                    try:
+                        devs = self._allocate_locked(
+                            ns, job.spec.devices_per_pod) \
+                            if job.spec.devices_per_pod else []
+                    except RuntimeError:
+                        self.metrics.inc(
+                            f"pod_unschedulable/{job.namespace}")
+                        continue
                     pod.restarts += 1
-                    pod.ctx.attempt = pod.restarts
+                    pod.ctx = PodCtx(pod.pod_id, job.namespace, devs,
+                                     self.metrics, attempt=pod.restarts)
+                    pod.holds_devices = bool(devs)
                     pod.error = None
-                    self._start_pod(pod)
-                    respawned += 1
+                    pod.state = PodState.PENDING
+                self._start_pod(pod)
+                respawned += 1
         return respawned
 
     def wait(self, job: Job, *, reconcile_every: float = 0.01,
@@ -202,16 +285,42 @@ class Cluster:
         raise TimeoutError(f"job {job.spec.name} timed out")
 
     # ------------------------------------------------------- node churn (§V)
+    def add_watcher(self, cb: Callable[[str, Any], None]) -> None:
+        """Register cb(event, device) for node churn ("fail" | "join")."""
+        self._watchers.append(cb)
+
     def fail_node(self, device) -> None:
-        """Simulate a node dropping out of the cluster."""
+        """A node drops out: mark it offline AND drain the pods on it.
+
+        Draining marks each affected pod FAILED (so ``reconcile`` reschedules
+        it onto surviving devices), releases its lease, and sets its
+        ``PodCtx.stop`` event so a cooperative fn can checkpoint and exit.
+        """
         with self._lock:
             self.offline.add(device)
+            drained = 0
+            for job in self.jobs:
+                for pod in job.pods:
+                    if pod.state in (PodState.PENDING, PodState.RUNNING) \
+                            and device in pod.ctx.devices:
+                        pod.state = PodState.FAILED
+                        pod.error = (f"NodeFailure: device {device!r} "
+                                     f"went offline")
+                        pod.ctx.stop.set()
+                        self._release_pod_locked(pod)
+                        drained += 1
+        if drained:
+            self.metrics.inc("node_drained_pods", drained)
+        for cb in list(self._watchers):
+            cb("fail", device)
 
     def join_node(self, device) -> None:
         with self._lock:
             self.offline.discard(device)
             if device not in self.devices:
                 self.devices.append(device)
+        for cb in list(self._watchers):
+            cb("join", device)
 
     @property
     def online_devices(self) -> List[Any]:

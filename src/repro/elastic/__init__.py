@@ -1,0 +1,27 @@
+"""Self-healing elastic training (paper §V: "nodes can join and leave the
+cluster at any time").
+
+``ElasticTrainer`` runs training as a *supervised Job* on the Kubernetes-style
+``repro.core.orchestrator.Cluster``: a churn controller watches node events;
+on failure the affected pods are drained, a rescale plan shrinks the mesh's
+data axis over the survivors, state is restored from the latest checkpoint
+onto the new shardings, and gradient accumulation is raised so the global
+batch stays constant — then the mesh scales back up when nodes rejoin.
+
+Modules:
+  * ``batch``      — global-batch-invariant accumulation math (BatchPlan)
+  * ``controller`` — ChurnController: node-churn events -> rescale decisions
+  * ``trainer``    — ElasticTrainer: the supervised training control loop
+"""
+from repro.elastic.batch import BatchPlan, batch_plan
+from repro.elastic.controller import ChurnController, Decision
+from repro.elastic.trainer import (ElasticRunReport, ElasticTrainer,
+                                   ElasticTrainSpec, SegmentRecord,
+                                   UnschedulableError)
+
+__all__ = [
+    "BatchPlan", "batch_plan",
+    "ChurnController", "Decision",
+    "ElasticRunReport", "ElasticTrainer", "ElasticTrainSpec", "SegmentRecord",
+    "UnschedulableError",
+]

@@ -12,8 +12,15 @@ import numpy as np
 from jax.sharding import Mesh
 
 
+# single source of truth for the fleet layouts (launch/train derives its
+# elastic base_shape from these; dryrun builds them directly)
+PRODUCTION_MESH_SHAPE = (16, 16)
+PRODUCTION_MESH_SHAPE_MULTI_POD = (2, 16, 16)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    shape = PRODUCTION_MESH_SHAPE_MULTI_POD if multi_pod \
+        else PRODUCTION_MESH_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 

@@ -1,49 +1,33 @@
-"""End-to-end training driver.
+"""End-to-end training driver — a thin wrapper over the ElasticTrainer.
 
     PYTHONPATH=src python -m repro.launch.train --arch phi4-mini-3.8b \
         --steps 50 --batch 4 --seq 128 --smoke --ckpt-dir /tmp/run1
 
-Wires together every substrate: config registry -> mesh -> sharded params/
-optimizer -> synthetic token pipeline (double-buffered) -> jitted train step
-(donated state) -> metrics -> async sharded checkpointing with auto-resume.
-``--smoke`` trains the reduced same-family config (CPU-runnable); without it
-the full assigned config is used (real hardware).  ``--fail-at`` injects a
-crash to exercise restart/auto-resume (fault tolerance demo; see also
-examples/elastic_failover.py).
+A single-device run is just the degenerate case of elastic training: a
+1-node cluster hosting one supervised Job (repro.elastic).  Everything the
+seed driver wired by hand — mesh, sharded state init, auto-resume, async
+checkpointing, metrics — is the trainer's segment logic, so this launcher
+only resolves configs and shapes.  ``--fail-at`` injects ONE crash at that
+step: the supervisor restores from the latest checkpoint and finishes the
+run in the same invocation (the seed raised and made you re-run by hand).
+
+Losses stay on device inside the step loop; the host syncs only on the
+``log_every`` cadence (the seed's per-step ``float(m["loss"])`` serialized
+dispatch — see repro.elastic.trainer).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import numpy as np
 
-from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs import registry
-from repro.configs.base import OptimizerConfig, ShapeConfig
+from repro.configs.base import OptimizerConfig
 from repro.core.metrics import Registry
+from repro.core.orchestrator import Cluster
 from repro.data.objectstore import ObjectStore
-from repro.data.tokens import TokenPipeline
-from repro.launch.mesh import make_production_mesh, single_device_mesh
-from repro.models import params as pr
-from repro.optim import adamw
-from repro.runtime import steps as steps_mod
-from repro.sharding import specs as sh
-
-
-def make_state(cfg, ocfg, mesh, rules, key):
-    mod = steps_mod._model_module(cfg)
-    schema = mod.lm_schema(cfg)
-    opt_schema = adamw.opt_state_schema(schema, ocfg)
-    with mesh:
-        params = jax.jit(
-            lambda k: pr.init_params(schema, k, cfg.param_dtype),
-            out_shardings=sh.shardings_for_schema(schema, mesh, rules))(key)
-        opt = jax.jit(
-            lambda: pr.init_params(opt_schema, jax.random.key(0), "float32"),
-            out_shardings=sh.shardings_for_schema(opt_schema, mesh, rules))()
-    return schema, opt_schema, params, opt
+from repro.elastic import ElasticTrainer, ElasticTrainSpec
+from repro.launch.mesh import PRODUCTION_MESH_SHAPE
 
 
 def train(arch: str, *, steps: int, seq: int, batch: int, smoke: bool,
@@ -61,55 +45,21 @@ def train(arch: str, *, steps: int, seq: int, batch: int, smoke: bool,
     ocfg = OptimizerConfig(
         lr=1e-3, warmup_steps=max(steps // 20, 1), decay_steps=steps,
         moment_dtype=ocfg.moment_dtype, second_moment=ocfg.second_moment)
-    mesh = make_production_mesh() if production_mesh else single_device_mesh()
-    rules = sh.logical_rules(par)
-    shape = ShapeConfig("train", seq, batch, "train")
-    cfg = steps_mod.resolve_cfg(cfg, shape)
 
     metrics = Registry()
-    bundle = steps_mod.build_train(cfg, par, ocfg, mesh, shape)
-    schema, opt_schema, params, opt = make_state(
-        cfg, ocfg, mesh, rules, jax.random.key(0))
-
-    ckpt = None
-    start_step = 0
-    if ckpt_dir:
-        ckpt = Checkpointer(ObjectStore(ckpt_dir), keep=2)
-        restored, meta = ckpt.restore_latest(
-            {"params": pr.abstract_params(schema, cfg.param_dtype),
-             "opt": pr.abstract_params(opt_schema, "float32")},
-            {"params": sh.shardings_for_schema(schema, mesh, rules),
-             "opt": sh.shardings_for_schema(opt_schema, mesh, rules)})
-        if restored is not None:
-            params, opt = restored["params"], restored["opt"]
-            start_step = int(meta["step"]) + 1
-            print(f"[train] auto-resumed from step {meta['step']}")
-
-    pipe = TokenPipeline(cfg.vocab_size, shape.seq_len, shape.global_batch,
-                         seed=17)
-    step_fn = bundle.jit()
-    losses = []
-    with mesh:
-        t0 = time.perf_counter()
-        for i in range(start_step, steps):
-            if i == fail_at:
-                raise RuntimeError(f"injected failure at step {i}")
-            batch_i = pipe.batch(i)
-            params, opt, m = step_fn(params, opt, batch_i)
-            loss = float(m["loss"])
-            losses.append(loss)
-            metrics.gauge("train/loss", loss)
-            metrics.gauge("train/grad_norm", float(m["grad_norm"]))
-            if ckpt is not None and ckpt_every and (i + 1) % ckpt_every == 0:
-                ckpt.save_async(i, {"params": params, "opt": opt})
-            if i % log_every == 0 or i == steps - 1:
-                dt = time.perf_counter() - t0
-                tps = shape.global_batch * shape.seq_len * (i - start_step + 1) / dt
-                print(f"[train] step {i} loss {loss:.4f} "
-                      f"gnorm {float(m['grad_norm']):.3f} tok/s {tps:,.0f}")
-    if ckpt is not None:
-        ckpt.wait()
-    return {"losses": losses, "params": params, "metrics": metrics}
+    cluster = Cluster(devices=jax.devices(), metrics=metrics)
+    spec = ElasticTrainSpec(
+        cfg, par, ocfg, steps=steps, seq_len=seq, global_batch=batch,
+        name=f"train-{arch}",
+        base_shape=PRODUCTION_MESH_SHAPE if production_mesh else (1, 1),
+        max_data=None if production_mesh else 1,
+        ckpt_every=ckpt_every, keep=2, log_every=log_every,
+        fail_at=fail_at, seed=0, data_seed=17)
+    store = ObjectStore(ckpt_dir) if ckpt_dir else None
+    trainer = ElasticTrainer(cluster, spec, store=store, metrics=metrics)
+    out = trainer.run()
+    return {"losses": out["losses"], "params": out["params"],
+            "metrics": metrics, "report": out["report"]}
 
 
 def main():
@@ -122,7 +72,9 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
-    ap.add_argument("--fail-at", type=int, default=-1)
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="inject one crash at this step; the elastic "
+                         "supervisor restores and finishes the run")
     args = ap.parse_args()
     out = train(args.arch, steps=args.steps, seq=args.seq, batch=args.batch,
                 smoke=args.smoke, ckpt_dir=args.ckpt_dir,

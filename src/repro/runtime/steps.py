@@ -34,6 +34,7 @@ class StepBundle:
     in_shardings: Tuple[Any, ...]
     out_shardings: Any
     donate_argnums: Tuple[int, ...] = ()
+    accum_steps: int = 1      # microbatches folded into one optimizer step
 
     def jit(self):
         return jax.jit(self.fn, in_shardings=self.in_shardings,
@@ -108,7 +109,23 @@ def extras_specs(cfg: ModelConfig, B: int):
 
 def build_train(cfg: ModelConfig, par: ParallelConfig, ocfg: OptimizerConfig,
                 mesh: Mesh, shape: ShapeConfig) -> StepBundle:
+    """Build one jitted optimizer step.
+
+    Gradient accumulation contract (``ocfg.accum_steps``): the step always
+    consumes the FULL ``shape.global_batch`` rows per call and splits them
+    into ``accum_steps`` sequential microbatches inside the jit, so the
+    global batch — and therefore the training trajectory — is independent
+    of ``accum_steps``.  Elastic rescale (repro.elastic) relies on this:
+    shrinking the data axis and raising ``accum_steps`` keeps batch x accum
+    constant while bounding per-device microbatch memory.
+    """
     cfg = resolve_cfg(cfg, shape)
+    accum = max(ocfg.accum_steps, 1)
+    if shape.global_batch % accum:
+        raise ValueError(
+            f"accum_steps={accum} must divide global_batch="
+            f"{shape.global_batch} (microbatches must be equal-sized "
+            f"for grad averaging to equal the full-batch gradient)")
     if par.pure_fsdp_train and not par.pure_fsdp:
         import dataclasses as _dc
         import numpy as _np
@@ -128,8 +145,6 @@ def build_train(cfg: ModelConfig, par: ParallelConfig, ocfg: OptimizerConfig,
     batch_abs, batch_axes = batch_specs(cfg, shape)
     batch_shd = _shardings(batch_abs, batch_axes, mesh, rules)
 
-    accum = max(ocfg.accum_steps, 1)
-
     def train_step(params, opt_state, batch):
         def loss_of(p, b):
             return mod.loss_fn(ctx, p, b)
@@ -147,7 +162,10 @@ def build_train(cfg: ModelConfig, par: ParallelConfig, ocfg: OptimizerConfig,
                 batch)
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), micro_b)
+            # strongly-typed f32 loss carry: scan needs identical carry
+            # avals, and grads accumulate in f32 regardless of param dtype
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zeros), micro_b)
             loss = loss / accum
             grads = jax.tree.map(lambda g: g / accum, grads)
 
@@ -165,6 +183,7 @@ def build_train(cfg: ModelConfig, par: ParallelConfig, ocfg: OptimizerConfig,
         in_shardings=(param_shd, opt_shd, batch_shd),
         out_shardings=(param_shd, opt_shd, _replicated(metrics_abs, mesh)),
         donate_argnums=(0, 1),
+        accum_steps=accum,
     )
 
 

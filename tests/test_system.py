@@ -1,5 +1,8 @@
 """End-to-end behaviour tests for the paper's system: workflow resume,
 pod-failure recovery, checkpoint fault tolerance, elastic rescale."""
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +11,7 @@ import pytest
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.core.elastic import make_elastic_mesh, rescale_plan
 from repro.core.metrics import StepReport, table_one
-from repro.core.orchestrator import Cluster, JobSpec
+from repro.core.orchestrator import Cluster, JobSpec, PodState
 from repro.core.workflow import Step, Workflow
 from repro.data.objectstore import ObjectStore
 
@@ -139,6 +142,105 @@ def test_node_failure_shrinks_online_set(cluster):
     assert len(cluster.online_devices) == 8
 
 
+def test_quota_released_across_sequential_jobs(cluster):
+    """The seed never released namespace quota: the 2nd identical job would
+    hit 'quota exceeded' even though the 1st had long finished."""
+    cluster.create_namespace("tight", device_quota=4)
+    for _ in range(5):
+        job = cluster.submit("tight", JobSpec(
+            "j", lambda ctx: sorted(ctx.devices), replicas=2,
+            devices_per_pod=2))
+        cluster.wait(job, timeout=30)
+        assert job.succeeded
+    assert cluster.namespaces["tight"].used_devices == 0
+    assert not cluster.leased
+
+
+def test_no_device_double_lease_under_concurrent_pods(cluster):
+    """Concurrently-live pods must hold disjoint devices (the seed handed
+    avail[:n] to everyone)."""
+    gate = threading.Event()
+    started = threading.Barrier(4, timeout=10)
+
+    def hold(ctx):
+        started.wait()       # all 4 pods live at once
+        gate.wait(timeout=10)
+        return list(ctx.devices)
+
+    jobs = [cluster.submit("default",
+                           JobSpec(f"h{i}", hold, devices_per_pod=2))
+            for i in range(4)]
+    held = []
+    for j in jobs:           # all pods are now holding their lease
+        held.append(tuple(j.pods[0].ctx.devices))
+    gate.set()
+    for j in jobs:
+        cluster.wait(j, timeout=30)
+    flat = [d for devs in held for d in devs]
+    assert len(flat) == len(set(flat)) == 8, f"double-leased: {held}"
+    assert cluster.namespaces["default"].used_devices == 0
+
+
+def test_fail_node_drains_pods_and_reconcile_recovers(cluster):
+    """fail_node must drain the pods on the dead device (docstring contract)
+    and reconcile must respawn them on freshly-allocated live devices."""
+    release = threading.Event()
+    seen_devices = []
+
+    def fn(ctx):
+        seen_devices.append(list(ctx.devices))
+        if ctx.attempt == 0:
+            release.wait(timeout=10)   # stay RUNNING until drained
+        return sorted(ctx.devices)
+
+    job = cluster.submit("default", JobSpec("train", fn, devices_per_pod=2,
+                                            backoff_limit=3))
+    pod = job.pods[0]
+    victim = pod.ctx.devices[0]
+    for _ in range(200):
+        if pod.state == PodState.RUNNING:
+            break
+        time.sleep(0.01)
+    cluster.fail_node(victim)
+    assert pod.state == PodState.FAILED          # drained, not just offline
+    assert "NodeFailure" in pod.error
+    assert pod.ctx.should_stop()                 # cooperative kill signal
+    release.set()
+    cluster.wait(job, timeout=30)
+    assert job.succeeded
+    # the respawn re-allocated: the dead device is NOT reused
+    assert victim not in job.pods[0].ctx.devices
+    assert pod.restarts == 1
+    assert cluster.namespaces["default"].used_devices == 0
+
+
+def test_drained_pod_late_completion_stays_failed(cluster):
+    """A drained pod that later finishes cooperatively keeps its FAILED
+    state (the node IS gone) but its returned value is preserved — the
+    elastic trainer reads the 'preempted at step k' marker from it."""
+    release = threading.Event()
+
+    def fn(ctx):
+        release.wait(timeout=10)
+        return "made-it-out"
+
+    job = cluster.submit("default", JobSpec("x", fn, devices_per_pod=2,
+                                            backoff_limit=0))
+    pod = job.pods[0]
+    for _ in range(200):
+        if pod.state == PodState.RUNNING:
+            break
+        time.sleep(0.01)
+    cluster.fail_node(pod.ctx.devices[0])
+    assert pod.state == PodState.FAILED
+    release.set()
+    pod.thread.join(timeout=10)
+    assert pod.state == PodState.FAILED          # not resurrected
+    assert pod.result == "made-it-out"           # but the result survives
+    assert cluster.namespaces["default"].used_devices == 0
+    assert not cluster.leased
+
+
 # -------------------------------------------------------------- checkpoint
 
 def test_checkpoint_roundtrip_and_gc(store):
@@ -170,6 +272,86 @@ def test_checkpoint_atomic_commit(store):
     # simulate a crashed save: shard written, no manifest
     store.put_array("checkpoints/step_0000000002/x/shard0.npy", np.ones(3))
     assert ck.latest_step() == 1
+
+
+def test_checkpoint_keep_semantics(store):
+    """keep=0 keeps NOTHING (the seed treated it as GC-off); keep=None is
+    the explicit GC-off spelling."""
+    ck0 = Checkpointer(store, prefix="k0", keep=0)
+    ck0.save(1, {"x": jnp.ones(2)})
+    assert ck0.all_steps() == []
+    ck_off = Checkpointer(store, prefix="koff", keep=None)
+    for s in (1, 2, 3, 4, 5):
+        ck_off.save(s, {"x": jnp.ones(2)})
+    assert ck_off.all_steps() == [1, 2, 3, 4, 5]
+
+
+def test_checkpoint_gc_deletes_manifest_first(store):
+    """At any instant, a visible manifest's shards are all on disk: GC must
+    delete MANIFEST.json before the shards (mirror of write-last commit)."""
+    deleted = []
+    orig = store.delete
+
+    def spy(key):
+        deleted.append(key)
+        return orig(key)
+
+    store.delete = spy
+    ck = Checkpointer(store, keep=1)
+    ck.save(1, {"x": jnp.ones(2)})
+    ck.save(2, {"x": jnp.ones(2)})           # GCs step 1
+    gc_keys = [k for k in deleted if "step_0000000001" in k]
+    assert gc_keys and gc_keys[0].endswith("MANIFEST.json")
+
+
+def test_checkpoint_gc_sweeps_orphaned_shards(store):
+    """A GC pass that died between the manifest delete and the shard
+    deletes must not leak those shards forever: the next pass sweeps
+    manifest-less dirs older than the newest committed step — while a
+    crashed/in-flight save at a NEWER step is left alone."""
+    ck = Checkpointer(store, keep=1)
+    ck.save(1, {"x": jnp.ones(2)})
+    # simulate the dead GC: step 0's manifest gone, shards left behind
+    store.put_array("checkpoints/step_0000000000/x/shard0.npy", np.ones(2))
+    # simulate an in-flight save: shards first, no manifest yet — the
+    # sequential writer always saves ABOVE the committed frontier
+    store.put_array("checkpoints/step_0000000004/x/shard0.npy", np.ones(2))
+    ck.save(3, {"x": jnp.ones(2)})
+    assert not store.list("checkpoints/step_0000000000/")   # swept
+    assert store.list("checkpoints/step_0000000004/")       # untouched
+
+
+def test_checkpoint_gc_vs_concurrent_restore_latest(store):
+    """A reader racing aggressive GC must always restore SOME committed
+    step — never crash on a manifest whose shards were deleted."""
+    ck = Checkpointer(store, keep=1)
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    ab = {"w": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    ck.save(0, tree)
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        reader_ck = Checkpointer(store, keep=1)
+        while not stop.is_set():
+            try:
+                restored, meta = reader_ck.restore_latest(ab)
+                assert restored is not None
+                np.testing.assert_array_equal(
+                    np.asarray(restored["w"]), np.arange(8, dtype=np.float32))
+            except Exception as e:     # pragma: no cover - failure capture
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for s in range(1, 40):             # each save GCs the previous step
+        ck.save(s, tree)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors, errors[:1]
 
 
 # ------------------------------------------------------------------ elastic
