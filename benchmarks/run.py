@@ -1,6 +1,6 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
 
 Outputs ``name,us_per_call,derived`` CSV rows:
   table1_*   — paper Table I: per-step resource summary of the CONNECT
@@ -13,10 +13,18 @@ Outputs ``name,us_per_call,derived`` CSV rows:
   lm_train_* — LM substrate: one sharded train step on the smoke config
                (derived = tokens/s).
   serve_*    — serving: prefill latency + decode steps/s.
+  fabric_*   — multi-site federation: locality-aware vs data-blind
+               placement (derived = bytes moved over the links).
+
+``--json PATH`` additionally writes the whole run as one trajectory
+record: every row as an object with its structured extras (``tok_s``,
+``bytes_moved``, ``transfer_s``, ...), so cross-PR tooling can track
+throughput and data movement in the same file.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import tempfile
 import time
 
@@ -25,10 +33,15 @@ import jax.numpy as jnp
 import numpy as np
 
 ROWS = []
+JSON_SCHEMA = "repro-bench/v1"
 
 
-def row(name: str, us_per_call: float, derived: str = ""):
-    ROWS.append((name, us_per_call, derived))
+def row(name: str, us_per_call: float, derived: str = "", **extra):
+    """One benchmark row.  ``extra`` keys (numbers) land verbatim in the
+    JSON trajectory record — bytes_moved / transfer_s / tok_s share one
+    schema with the paper-figure timings."""
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": derived, **extra})
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
@@ -49,7 +62,8 @@ def bench_connect_workflow(fast: bool):
         wf, results = run_connect_workflow(d, cc)
     for rep in wf.reports:
         row(f"table1_{rep.step}", rep.total_time_s * 1e6,
-            f"bytes={rep.data_processed_bytes}")
+            f"bytes={rep.data_processed_bytes}",
+            bytes=rep.data_processed_bytes)
     return results
 
 
@@ -195,10 +209,11 @@ def bench_serve(fast: bool):
 
     s, c = best(serve_static), best(serve)
     row("serve_static", s["serve/wall_s"] * 1e6,
-        f"tok_s={s['serve/tok_s']:.1f}")
+        f"tok_s={s['serve/tok_s']:.1f}", tok_s=s["serve/tok_s"])
     row("serve_continuous", c["serve/wall_s"] * 1e6,
         f"tok_s={c['serve/tok_s']:.1f};"
-        f"speedup={c['serve/tok_s'] / max(s['serve/tok_s'], 1e-9):.2f}")
+        f"speedup={c['serve/tok_s'] / max(s['serve/tok_s'], 1e-9):.2f}",
+        tok_s=c["serve/tok_s"])
 
 
 def bench_elastic_churn(fast: bool):
@@ -234,18 +249,82 @@ def bench_elastic_churn(fast: bool):
                if l.startswith("CHURN_REPORT "))
     steps = rep["steps"]
     row("elastic_churn_train", rep["total_wall_s"] / steps * 1e6,
-        f"tok_s={rep['tokens_per_s']:.1f};recoveries={rep['recoveries']}")
+        f"tok_s={rep['tokens_per_s']:.1f};recoveries={rep['recoveries']}",
+        tok_s=rep["tokens_per_s"])
     recovery = (sum(rep["recovery_s"]) / len(rep["recovery_s"])
                 if rep["recovery_s"] else 0.0)
     overhead = rep["tokens_executed"] / max(
         steps * rep["global_batch"] * rep["seq_len"], 1) - 1.0
     row("elastic_churn_recovery", recovery * 1e6,
-        f"steps_lost={rep['steps_lost']};reexec_overhead={overhead:.1%}")
+        f"steps_lost={rep['steps_lost']};reexec_overhead={overhead:.1%}",
+        steps_lost=rep["steps_lost"])
+
+
+def bench_fabric_placement(fast: bool):
+    """Multi-site federation (paper §IV): locality-aware vs data-blind
+    placement on a 3-site fabric with skewed data.
+
+    Most of the dataset homes at one hub site; the spokes hang off slow
+    links.  Both planners run the identical 2-step workflow (a chunk
+    "stats" pass, then a reduce over its output) with ``time_scale=1.0``,
+    so wall-clock IS the simulated makespan: the data-blind round-robin
+    drags chunks across the slow links, the locality planner runs at the
+    data.  Locality must move strictly fewer bytes at no makespan cost.
+    """
+    from repro.core.workflow import Step, Workflow
+    from repro.fabric import Fabric, FederatedStore, PlacementPlanner
+
+    n_chunks = 4 if fast else 6
+    chunk_mb = 2 if fast else 8
+
+    def run(data_blind: bool):
+        fabric = Fabric(time_scale=1.0)
+        fabric.add_site("hub", devices=list(range(4)))
+        fabric.add_site("spoke-a", devices=list(range(2)))
+        fabric.add_site("spoke-b", devices=list(range(1)))
+        fabric.connect("hub", "spoke-a", gbps=0.2, latency_ms=10.0)
+        fabric.connect("hub", "spoke-b", gbps=0.1, latency_ms=20.0)
+        fabric.connect("spoke-a", "spoke-b", gbps=0.1, latency_ms=20.0)
+        fed = FederatedStore(fabric)
+        rng = np.random.RandomState(0)
+        keys = []
+        for i in range(n_chunks):
+            # skew: all but one chunk homes at the hub
+            site = "hub" if i % n_chunks else "spoke-a"
+            key = f"chunks/c{i}.npy"
+            fed.view(site).put_array(
+                key, rng.rand(chunk_mb * 2**20 // 8).astype(np.float64))
+            keys.append(key)
+        planner = PlacementPlanner(fed, data_blind=data_blind)
+        wf = Workflow("fabric-bench", planner=planner)
+        for i, key in enumerate(keys):      # one measured pass per chunk
+            wf.add(Step(f"stats{i}",
+                        lambda ctx, k=key: {
+                            "mean": float(ctx.store.get_array(k).mean())},
+                        inputs=[key]))
+        wf.add(Step("reduce", lambda ctx: {
+            "mean": float(np.mean([v["mean"] for v in ctx.inputs.values()]))},
+            deps=[f"stats{i}" for i in range(n_chunks)]))
+        t0 = time.perf_counter()
+        wf.run()
+        makespan = time.perf_counter() - t0
+        m = fabric.metrics
+        return (makespan, int(m.series("fabric/bytes_moved").total),
+                m.series("fabric/transfer_s").total)
+
+    for name, blind in (("fabric_locality", False), ("fabric_blind", True)):
+        makespan, moved, sim_s = run(blind)
+        row(name, makespan * 1e6,
+            f"bytes_moved={moved};transfer_s={sim_s:.2f}",
+            bytes_moved=moved, transfer_s=round(sim_s, 4),
+            makespan_s=round(makespan, 3))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="also write the rows as a JSON trajectory record")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
     bench_connect_workflow(args.fast)
@@ -255,7 +334,13 @@ def main() -> None:
     bench_lm_train(args.fast)
     bench_serve(args.fast)
     bench_elastic_churn(args.fast)
+    bench_fabric_placement(args.fast)
     print(f"\n# {len(ROWS)} benchmark rows")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": JSON_SCHEMA, "created_unix": time.time(),
+                       "fast": args.fast, "rows": ROWS}, f, indent=1)
+        print(f"# json trajectory -> {args.json}")
 
 
 if __name__ == "__main__":

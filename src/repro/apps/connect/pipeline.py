@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,12 +58,27 @@ def step_download(ctx: StepCtx, cc: ConnectConfig):
     queue = WorkQueue(list(enumerate(keys)), lease_timeout=60.0)
     t0 = time.perf_counter()
     total = {"bytes": 0}
+    # Federated run (repro.fabric): each chunk lands at its "nearest
+    # THREDDS mirror" — scattered round-robin across live sites, with one
+    # off-site replica so a single site loss never strands the raw data.
+    # Single-cluster run: ctx.store has no fabric and writes stay local.
+    fed = getattr(ctx.store, "fed", None)
+    sites = [s.name for s in fed.fabric.up_sites()] if fed is not None else []
 
     def fetch(item):
         cid, key = item
         ivt, labels = volumes.generate_chunk(cc.vol, cid)
-        n = ctx.store.put_array(f"{key}/ivt.npy", ivt)
-        n += ctx.store.put_array(f"{key}/labels.npy", labels)
+        if sites:
+            home = fed.view(sites[cid % len(sites)])
+            n = home.put_array(f"{key}/ivt.npy", ivt)
+            n += home.put_array(f"{key}/labels.npy", labels)
+            if len(sites) > 1:
+                mirror = sites[(cid + 1) % len(sites)]
+                for k in (f"{key}/ivt.npy", f"{key}/labels.npy"):
+                    fed.replicate(k, mirror)
+        else:
+            n = ctx.store.put_array(f"{key}/ivt.npy", ivt)
+            n += ctx.store.put_array(f"{key}/labels.npy", labels)
         ctx.metrics.inc("download/bytes", n)
         total["bytes"] += n
         return key
@@ -210,19 +225,35 @@ def step_analyze(ctx: StepCtx, cc: ConnectConfig):
 
 # ---------------------------------------------------------------------------
 
-def build_workflow(cluster: Cluster, store: ObjectStore,
+def dataset_keys(cc: ConnectConfig) -> Dict[str, List[str]]:
+    """The pipeline's dataset keys, per kind — what federated placement
+    scores (which site holds the IVT chunks / model / masks)."""
+    keys = volumes.chunk_keys(cc.n_chunks)
+    return {"ivt": [f"{k}/ivt.npy" for k in keys],
+            "labels": [f"{k}/labels.npy" for k in keys],
+            "masks": [f"{k}/mask.npy" for k in keys],
+            "model": ["models/ffn/*"]}
+
+
+def build_workflow(cluster: Optional[Cluster] = None,
+                   store: Optional[ObjectStore] = None,
                    cc: Optional[ConnectConfig] = None,
-                   metrics: Optional[Registry] = None) -> Workflow:
+                   metrics: Optional[Registry] = None,
+                   planner=None) -> Workflow:
     cc = cc or ConnectConfig()
+    ds = dataset_keys(cc)
     wf = Workflow("connect", cluster=cluster, store=store, metrics=metrics,
-                  namespace="atmos-science")
+                  namespace="atmos-science", planner=planner)
     wf.add(Step("download", lambda ctx: step_download(ctx, cc),
-                pods=cc.download_workers))
-    wf.add(Step("train", lambda ctx: step_train(ctx, cc), deps=["download"]))
+                pods=cc.download_workers,
+                outputs=ds["ivt"] + ds["labels"]))
+    wf.add(Step("train", lambda ctx: step_train(ctx, cc), deps=["download"],
+                inputs=[ds["ivt"][0], ds["labels"][0]], outputs=ds["model"]))
     wf.add(Step("inference", lambda ctx: step_inference(ctx, cc),
-                deps=["train"], pods=cc.inference_workers))
+                deps=["train"], pods=cc.inference_workers,
+                inputs=ds["ivt"] + ds["model"], outputs=ds["masks"]))
     wf.add(Step("analyze", lambda ctx: step_analyze(ctx, cc),
-                deps=["inference"]))
+                deps=["inference"], inputs=ds["masks"]))
     return wf
 
 

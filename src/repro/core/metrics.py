@@ -115,6 +115,7 @@ class StepReport:
     data_processed_bytes: int = 0
     memory_bytes: int = 0
     total_time_s: float = 0.0
+    site: str = ""            # federation site the step ran at (repro.fabric)
     extra: Dict[str, float] = field(default_factory=dict)
 
 
@@ -138,6 +139,10 @@ def table_one(reports: List[StepReport]) -> str:
         ("Total Time", [f"{r.total_time_s:.1f}s" for r in reports]),
     ]
     out = [head, sep]
+    # multi-site runs (repro.fabric) say where each step landed
+    if any(r.site for r in reports):
+        out.append("| Site | " + " | ".join(r.site or "-" for r in reports)
+                   + " |")
     for name, vals in rows:
         out.append("| " + name + " | " + " | ".join(vals) + " |")
     # free-form per-step metrics (e.g. serving tokens/s, slot occupancy)

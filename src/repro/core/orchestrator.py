@@ -57,6 +57,7 @@ class PodCtx:
     devices: List[Any]
     metrics: Registry
     attempt: int = 0
+    site: str = "local"       # which federation site's cluster runs this pod
     stop: threading.Event = field(default_factory=threading.Event)
 
     def should_stop(self) -> bool:
@@ -110,14 +111,21 @@ class Job:
 
 
 class Cluster:
-    """A set of devices ("nodes") + Kubernetes-style controller loop."""
+    """A set of devices ("nodes") + Kubernetes-style controller loop.
+
+    ``site`` tags the cluster (and every device/pod it schedules) with the
+    federation site that owns it — one PRP appliance in the paper's terms.
+    A standalone cluster is the degenerate single-site case ("local");
+    ``repro.fabric`` wires many site-tagged clusters into one fabric.
+    """
 
     def __init__(self, devices: Optional[List[Any]] = None,
-                 metrics: Optional[Registry] = None):
+                 metrics: Optional[Registry] = None, site: str = "local"):
         if devices is None:
             import jax
             devices = list(jax.devices())
         self._lock = threading.Lock()
+        self.site = site
         self.devices = list(devices)
         self.offline: set = set()
         self.leased: set = set()
@@ -179,7 +187,7 @@ class Cluster:
                         if spec.devices_per_pod else []
                     ctx = PodCtx(pod_id=f"{spec.name}-{i}",
                                  namespace=namespace, devices=devs,
-                                 metrics=self.metrics)
+                                 metrics=self.metrics, site=self.site)
                     pod = Pod(ctx.pod_id, spec.fn, ctx)
                     pod.holds_devices = bool(devs)
                     pods.append(pod)
@@ -259,7 +267,8 @@ class Cluster:
                         continue
                     pod.restarts += 1
                     pod.ctx = PodCtx(pod.pod_id, job.namespace, devs,
-                                     self.metrics, attempt=pod.restarts)
+                                     self.metrics, attempt=pod.restarts,
+                                     site=self.site)
                     pod.holds_devices = bool(devs)
                     pod.error = None
                     pod.state = PodState.PENDING
@@ -313,6 +322,35 @@ class Cluster:
             self.metrics.inc("node_drained_pods", drained)
         for cb in list(self._watchers):
             cb("fail", device)
+
+    def fail_all_nodes(self) -> None:
+        """Whole-appliance outage: every node goes offline, every pod
+        drains — INCLUDING device-less (CPU-only) pods, which the
+        per-device drain in fail_node never touches.
+
+        The federation layer (repro.fabric) escalates this beyond the
+        single-cluster reconciler — surviving *sites* pick up the work."""
+        for d in list(self.devices):
+            self.fail_node(d)
+        with self._lock:
+            drained = 0
+            for job in self.jobs:
+                for pod in job.pods:
+                    if pod.state in (PodState.PENDING, PodState.RUNNING):
+                        pod.state = PodState.FAILED
+                        pod.error = "NodeFailure: whole site went offline"
+                        pod.ctx.stop.set()
+                        self._release_pod_locked(pod)
+                        drained += 1
+        if drained:
+            self.metrics.inc("node_drained_pods", drained)
+
+    def queue_depth(self) -> int:
+        """Pods admitted but not yet terminal — the congestion signal the
+        fabric placement planner folds into its site score."""
+        with self._lock:
+            return sum(1 for job in self.jobs for p in job.pods
+                       if p.state in (PodState.PENDING, PodState.RUNNING))
 
     def join_node(self, device) -> None:
         with self._lock:

@@ -15,6 +15,15 @@ Here a ``Workflow`` is a DAG of ``Step``s executed on a ``Cluster``:
     last completed step (fault tolerance at the workflow level, on top of
     the queue's at-least-once and the checkpointer's auto-resume);
   * ``only=`` runs a single step in isolation (PPoDS independent testing).
+
+Federated mode (paper §IV, ``repro.fabric``): construct the workflow with
+a ``planner`` instead of a fixed cluster/store, and annotate steps with
+the dataset keys they consume/produce (``inputs=``/``outputs=``).  Every
+step is then *placed*: the planner scores each live site by the simulated
+cost of moving the step's missing input bytes plus its queue depth, picks
+a site, pre-stages missing inputs over the bandwidth-modeled links, and
+runs the step on that site's cluster against that site's store view.  The
+step report gains ``site``, ``bytes_moved`` and ``transfer_s`` columns.
 """
 from __future__ import annotations
 
@@ -47,6 +56,11 @@ class Step:
     deps: Sequence[str] = ()
     pods: int = 1
     devices_per_pod: int = 0
+    # dataset keys this step reads/writes in the (federated) store; the
+    # placement planner scores sites by where `inputs` replicas live.  An
+    # entry "prefix/*" globs every cataloged key under the prefix.
+    inputs: Sequence[str] = ()
+    outputs: Sequence[str] = ()
 
     def marker_key(self, wf: str) -> str:
         return f"workflows/{wf}/{self.name}/_COMPLETE"
@@ -56,18 +70,32 @@ class Step:
 
 
 class Workflow:
-    def __init__(self, name: str, *, cluster: Cluster, store: ObjectStore,
-                 metrics: Optional[Registry] = None, namespace: str = "default"):
+    def __init__(self, name: str, *, cluster: Optional[Cluster] = None,
+                 store: Optional[ObjectStore] = None,
+                 metrics: Optional[Registry] = None,
+                 namespace: str = "default", planner=None):
+        """Single-cluster mode needs ``cluster`` + ``store``; federated
+        mode needs a ``repro.fabric.PlacementPlanner`` and places each
+        step on the fabric instead."""
         self.name = name
+        self.planner = planner
+        if planner is None and (cluster is None or store is None):
+            raise TypeError("Workflow needs cluster+store, or a planner")
         self.cluster = cluster
         self.store = store
-        self.metrics = metrics or cluster.metrics
+        self.metrics = metrics or (cluster.metrics if cluster is not None
+                                   else planner.fabric.metrics)
         self.namespace = namespace
-        if namespace not in cluster.namespaces:
+        if cluster is not None and namespace not in cluster.namespaces:
             cluster.create_namespace(namespace)
         self.steps: Dict[str, Step] = {}
         self.reports: List[StepReport] = []
         self.results: Dict[str, Any] = {}
+
+    # control-plane reads/writes work in both modes: a plain ObjectStore,
+    # or the federated catalog (whole-namespace view)
+    def _ctrl(self):
+        return self.store if self.store is not None else self.planner.fed
 
     # ------------------------------------------------------------------ DAG
     def add(self, step: Step) -> "Workflow":
@@ -77,10 +105,12 @@ class Workflow:
         return self
 
     def step(self, name: str, deps: Sequence[str] = (), pods: int = 1,
-             devices_per_pod: int = 0):
+             devices_per_pod: int = 0, inputs: Sequence[str] = (),
+             outputs: Sequence[str] = ()):
         """Decorator form: @wf.step("train", deps=["download"])"""
         def deco(fn):
-            self.add(Step(name, fn, deps, pods, devices_per_pod))
+            self.add(Step(name, fn, deps, pods, devices_per_pod,
+                          inputs, outputs))
             return fn
         return deco
 
@@ -108,25 +138,50 @@ class Workflow:
         for step in self._topo_order():
             if only is not None and step.name != only:
                 # still load completed deps' outputs for the isolated step
-                if self.store.exists(step.marker_key(self.name)):
+                if self._ctrl().exists(step.marker_key(self.name)):
                     self.results[step.name] = json.loads(
-                        self.store.get(step.output_key(self.name)))
+                        self._ctrl().get(step.output_key(self.name)))
                 continue
             self._run_step(step, resume)
         return dict(self.results)
 
+    def _place(self, step: Step):
+        """Federated mode: choose the step's site, pre-stage its missing
+        inputs, and return (cluster, store_view, placement)."""
+        placement = self.planner.place(
+            step.inputs, devices=step.devices_per_pod * max(1, step.pods))
+        site = self.planner.fabric.sites[placement.site]
+        if self.namespace not in site.cluster.namespaces:
+            site.cluster.create_namespace(self.namespace)
+        self.planner.prestage(step.inputs, placement.site)
+        return site.cluster, self.planner.fed.view(placement.site), placement
+
     def _run_step(self, step: Step, resume: bool) -> None:
         marker = step.marker_key(self.name)
-        if resume and self.store.exists(marker):
+        if resume and self._ctrl().exists(marker):
             self.results[step.name] = json.loads(
-                self.store.get(step.output_key(self.name)))
+                self._ctrl().get(step.output_key(self.name)))
             self.metrics.inc(f"workflow/{self.name}/{step.name}/skipped")
             return
 
         report = StepReport(step=step.name, pods=step.pods,
                             cpus=step.pods,
                             devices=step.pods * step.devices_per_pod)
-        ctx = StepCtx(cluster=self.cluster, store=self.store,
+        if self.planner is not None:
+            # snapshot the FABRIC meters (not self.metrics, which a caller
+            # may have overridden) so pre-staging AND any on-demand
+            # pull-through reads inside the step are attributed to it
+            fmetrics = self.planner.fabric.metrics
+            moved0 = fmetrics.series("fabric/bytes_moved").total
+            sim0 = fmetrics.series("fabric/transfer_s").total
+            cluster, store, placement = self._place(step)
+            report.site = placement.site
+            if placement.migrated:
+                report.extra["migrated"] = 1.0
+                fmetrics.inc("fabric/migrations")
+        else:
+            cluster, store, placement = self.cluster, self.store, None
+        ctx = StepCtx(cluster=cluster, store=store,
                       metrics=self.metrics, namespace=self.namespace,
                       inputs={d: self.results[d] for d in step.deps},
                       report=report)
@@ -136,18 +191,35 @@ class Workflow:
                 out = step.fn(ctx)
             else:
                 # gang of pods; the step fn coordinates via a WorkQueue
-                job = self.cluster.submit(self.namespace, JobSpec(
+                job = cluster.submit(self.namespace, JobSpec(
                     name=f"{self.name}-{step.name}", fn=lambda pc: step.fn(ctx),
                     replicas=1, devices_per_pod=step.devices_per_pod))
-                self.cluster.wait(job)
+                cluster.wait(job)
                 out = job.results()[0]
         report.total_time_s = time.perf_counter() - t0
-        self.reports.append(report)
         self.results[step.name] = out
 
-        self.store.put(step.output_key(self.name),
-                       json.dumps(out, default=str).encode())
-        self.store.put(marker, b"ok")
+        store.put(step.output_key(self.name),
+                  json.dumps(out, default=str).encode())
+        store.put(marker, b"ok")
+        if self.planner is not None:
+            # control-plane metadata (markers + output manifests, a few
+            # bytes) is replicated to every live site, like Ceph metadata:
+            # a later site loss must not un-complete finished steps.
+            # Batched per site: one link latency, not one per key.
+            ctrl_keys = [step.output_key(self.name), marker]
+            for s in self.planner.fabric.up_sites():
+                if s.name != placement.site:
+                    self.planner.fed.replicate_many(ctrl_keys, s.name)
+            for key in self.planner.expand(step.outputs):
+                if not self.planner.fed.exists(key):   # declared, not written
+                    self.metrics.inc(f"workflow/{self.name}/{step.name}"
+                                     f"/missing_output")
+            report.extra["bytes_moved"] = \
+                fmetrics.series("fabric/bytes_moved").total - moved0
+            report.extra["transfer_s"] = \
+                fmetrics.series("fabric/transfer_s").total - sim0
+        self.reports.append(report)
 
     # ------------------------------------------------------------- reporting
     def table_one(self) -> str:
@@ -157,6 +229,6 @@ class Workflow:
     def reset(self) -> None:
         for step in self.steps.values():
             for key in (step.marker_key(self.name), step.output_key(self.name)):
-                self.store.delete(key)
+                self._ctrl().delete(key)
         self.results.clear()
         self.reports.clear()

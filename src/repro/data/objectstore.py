@@ -19,16 +19,48 @@ from typing import Iterator, List, Optional
 import numpy as np
 
 
-class ObjectStore:
+class BlobCodecs:
+    """Typed serialization over the raw blob API (``put``/``get``/``list``/
+    ``size``) — shared by the local ObjectStore and the federated SiteStore
+    facade (repro.fabric), so callers never care which one they hold."""
+
+    def put_array(self, key: str, arr: np.ndarray) -> int:
+        buf = io.BytesIO()
+        np.save(buf, np.asarray(arr), allow_pickle=False)
+        data = buf.getvalue()
+        self.put(key, data)
+        return len(data)
+
+    def get_array(self, key: str) -> np.ndarray:
+        return np.load(io.BytesIO(self.get(key)), allow_pickle=False)
+
+    def put_json(self, key: str, obj) -> None:
+        self.put(key, json.dumps(obj, indent=1, default=str).encode())
+
+    def get_json(self, key: str):
+        return json.loads(self.get(key))
+
+    def total_bytes(self, prefix: str = "") -> int:
+        return sum(self.size(k) for k in self.list(prefix))
+
+
+class ObjectStore(BlobCodecs):
     def __init__(self, root: str):
-        self.root = Path(root)
+        # resolve once so _path containment and list's relative_to agree
+        # even when `root` itself is relative or reached via a symlink
+        self.root = Path(root).resolve()
         self.root.mkdir(parents=True, exist_ok=True)
         self._lock = threading.Lock()
 
     def _path(self, key: str) -> Path:
         p = (self.root / key).resolve()
-        if not str(p).startswith(str(self.root.resolve())):
-            raise ValueError(f"key escapes store: {key}")
+        # Path.relative_to is the component-wise containment check: a plain
+        # string startswith() admitted sibling dirs with a common prefix
+        # (root /x/store accepted /x/store2/...).
+        try:
+            p.relative_to(self.root)
+        except ValueError:
+            raise ValueError(f"key escapes store: {key}") from None
         return p
 
     # ------------------------------------------------------------------ api
@@ -59,34 +91,22 @@ class ObjectStore:
         return False
 
     def list(self, prefix: str = "") -> List[str]:
-        base = self.root
-        out = []
-        for p in base.rglob("*"):
-            if p.is_file() and not p.name.startswith(".tmp-"):
-                rel = str(p.relative_to(base))
-                if rel.startswith(prefix):
-                    out.append(rel)
+        """Keys under ``prefix``, path-aware: the prefix names an exact key
+        or a key-path subtree — ``"ab"`` matches ``ab`` and ``ab/x`` but
+        never ``abc/...``.  Only the prefix subtree is walked, so listing
+        one workflow's keys is O(that subtree), not O(total objects)."""
+        if not prefix:
+            base = self.root
+        else:
+            base = self._path(prefix.rstrip("/"))
+            if base.is_file():
+                return [] if prefix.endswith("/") \
+                    else [str(base.relative_to(self.root))]
+        if not base.is_dir():
+            return []
+        out = [str(p.relative_to(self.root)) for p in base.rglob("*")
+               if p.is_file() and not p.name.startswith(".tmp-")]
         return sorted(out)
 
     def size(self, key: str) -> int:
         return self._path(key).stat().st_size
-
-    # ------------------------------------------------------------ array io
-    def put_array(self, key: str, arr: np.ndarray) -> int:
-        buf = io.BytesIO()
-        np.save(buf, np.asarray(arr), allow_pickle=False)
-        data = buf.getvalue()
-        self.put(key, data)
-        return len(data)
-
-    def get_array(self, key: str) -> np.ndarray:
-        return np.load(io.BytesIO(self.get(key)), allow_pickle=False)
-
-    def put_json(self, key: str, obj) -> None:
-        self.put(key, json.dumps(obj, indent=1, default=str).encode())
-
-    def get_json(self, key: str):
-        return json.loads(self.get(key))
-
-    def total_bytes(self, prefix: str = "") -> int:
-        return sum(self.size(k) for k in self.list(prefix))

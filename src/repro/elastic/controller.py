@@ -27,6 +27,14 @@ from repro.core.orchestrator import Cluster
 from repro.elastic.batch import BatchPlan, batch_plan
 
 
+class CapacityLostError(RuntimeError):
+    """``wait_for_capacity`` exhausted its rejoin window: this cluster can
+    no longer host even one model replica (e.g. a whole site unplugged).
+    The single-cluster trainer cannot recover from this — it escalates to
+    whoever owns more than one cluster (``repro.fabric.failover`` answers
+    by moving the job, with its checkpoints, to a surviving site)."""
+
+
 @dataclass(frozen=True)
 class Decision:
     """One controller verdict: the mesh+accum the trainer should run on."""
@@ -108,7 +116,8 @@ class ChurnController:
         while True:
             try:
                 return self.decide(None)
-            except RuntimeError:
+            except RuntimeError as e:
                 if time.monotonic() >= deadline:
-                    raise
+                    raise CapacityLostError(
+                        f"no capacity after {timeout:.0f}s: {e}") from e
                 time.sleep(poll)

@@ -169,7 +169,8 @@ class ElasticTrainer:
 
     def __init__(self, cluster: Cluster, spec: ElasticTrainSpec, *,
                  store: Optional[ObjectStore] = None,
-                 metrics: Optional[Registry] = None):
+                 metrics: Optional[Registry] = None,
+                 report: Optional[ElasticRunReport] = None):
         self.cluster = cluster
         self.spec = spec
         self._ephemeral_store = store is None
@@ -182,7 +183,10 @@ class ElasticTrainer:
         self.controller = ChurnController(
             cluster, axes=spec.mesh_axes, base_shape=spec.base_shape,
             global_batch=spec.global_batch, max_data=spec.max_data)
-        self.report = ElasticRunReport(
+        # a caller-provided report continues a run that escalated off a
+        # dead cluster (repro.fabric cross-site failover): segments, losses
+        # lost and wall time keep accumulating across sites
+        self.report = report or ElasticRunReport(
             global_batch=spec.global_batch, seq_len=spec.seq_len,
             steps=spec.steps)
         self.shape = ShapeConfig("elastic", spec.seq_len, spec.global_batch,
@@ -370,15 +374,43 @@ class ElasticTrainer:
 
     # ------------------------------------------------------------------ run
     def run(self) -> Dict[str, Any]:
-        """Train to ``spec.steps`` across any node-churn schedule."""
+        """Train to ``spec.steps`` across any node-churn schedule.
+
+        Raises ``CapacityLostError`` (from the controller) when the whole
+        cluster drops below one model replica for longer than the rejoin
+        window — partial progress stays in the report/store so a
+        federation supervisor can resume the job on another site."""
         spec = self.spec
         if spec.namespace not in self.cluster.namespaces:
             self.cluster.create_namespace(spec.namespace)
         t_run0 = time.perf_counter()
+        try:
+            self._run_segments(len(self.report.segments))
+        finally:
+            # wall time ACCUMULATES (not assigns): a job escalated across
+            # sites keeps every site's seconds on its clock
+            self.report.total_wall_s += time.perf_counter() - t_run0
+        assert self.report.global_batch_constant, \
+            "elastic invariant violated: global batch changed across meshes"
+        if self._ephemeral_store:
+            # trainer-owned throwaway checkpoint dir: don't leak /tmp space
+            # run after run (kept on error paths — raises above — so a
+            # crashed run can still be inspected and resumed)
+            import shutil
+            shutil.rmtree(self.store.root, ignore_errors=True)
+        losses = dict(self._losses)
+        self.metrics.gauge("elastic/tokens_per_s", self.report.tokens_per_s)
+        return {"losses": [losses[i] for i in sorted(losses)],
+                "loss_by_step": losses,
+                "params": self._final.get("params"),
+                "opt": self._final.get("opt"),
+                "report": self.report}
+
+    def _run_segments(self, seg_idx: int) -> None:
+        spec = self.spec
         failures = 0
         pending_lost_from: Optional[int] = None
         t_fail: Optional[float] = None
-        seg_idx = 0
         done = False
         unsched_since: Optional[float] = None
         while not done:
@@ -453,19 +485,3 @@ class ElasticTrainer:
                 wall_s=res.wall_s if res is not None else 0.0,
                 outcome=outcome))
             seg_idx += 1
-        self.report.total_wall_s = time.perf_counter() - t_run0
-        assert self.report.global_batch_constant, \
-            "elastic invariant violated: global batch changed across meshes"
-        if self._ephemeral_store:
-            # trainer-owned throwaway checkpoint dir: don't leak /tmp space
-            # run after run (kept on error paths — raises above — so a
-            # crashed run can still be inspected and resumed)
-            import shutil
-            shutil.rmtree(self.store.root, ignore_errors=True)
-        losses = dict(self._losses)
-        self.metrics.gauge("elastic/tokens_per_s", self.report.tokens_per_s)
-        return {"losses": [losses[i] for i in sorted(losses)],
-                "loss_by_step": losses,
-                "params": self._final.get("params"),
-                "opt": self._final.get("opt"),
-                "report": self.report}

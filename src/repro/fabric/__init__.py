@@ -1,0 +1,15 @@
+"""Multi-site federation (paper §I, §IV): sites + bandwidth-modeled links,
+a single content-addressed namespace with per-site replicas, locality-aware
+placement, and cross-site elastic failover."""
+from repro.fabric.topology import Fabric, Link, Site
+from repro.fabric.federated import FederatedStore, SiteStore
+from repro.fabric.placement import Placement, PlacementPlanner
+from repro.fabric.failover import (FederatedTrainResult, Migration,
+                                   run_elastic_federated)
+
+__all__ = [
+    "Fabric", "Link", "Site",
+    "FederatedStore", "SiteStore",
+    "Placement", "PlacementPlanner",
+    "FederatedTrainResult", "Migration", "run_elastic_federated",
+]

@@ -1,0 +1,192 @@
+"""Sites + links — the Pacific Research Platform as a modeled network.
+
+The paper's infrastructure is not one cluster: it is ~30 GPU appliances
+("FIONAs") at PRP member institutions, joined by 10-100 Gbps links, with
+"virtual cluster management for data communication" deciding where data
+and compute meet (§I, §IV).  This module models that federation:
+
+  * a ``Site`` owns its own site-tagged ``Cluster`` (compute) and
+    ``ObjectStore`` (its Ceph pool) — one appliance / campus;
+  * a ``Link`` between two sites has configured bandwidth and latency;
+    moving bytes across it *costs* simulated wall-time
+    ``latency + bytes / bandwidth`` and is metered into the shared
+    metrics ``Registry`` (``fabric/bytes_moved``, ``fabric/transfer_s``,
+    per-link byte counters) — the §VI measure-everything discipline
+    applied to the network;
+  * ``Fabric`` is the topology: site registry, link table, the transfer
+    cost model, whole-site failure (``fail_site`` drains the site's
+    cluster and hides its replicas), and a cross-site ``submit`` that
+    places a ``JobSpec`` on the least-loaded live site.
+
+``time_scale`` maps simulated transfer seconds onto real sleeps so a
+benchmark's wall-clock *is* its simulated makespan (``time_scale=1.0``),
+while unit tests run with ``time_scale=0`` and only the meters move.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.metrics import Registry
+from repro.core.orchestrator import Cluster, Job, JobSpec
+from repro.data.objectstore import ObjectStore
+
+
+@dataclass(frozen=True)
+class Link:
+    """A directed site-to-site network path with a bandwidth/latency model."""
+    src: str
+    dst: str
+    gbps: float                 # bandwidth, gigabits per second
+    latency_s: float = 0.0      # per-transfer setup latency (RTT-ish)
+
+    @property
+    def bytes_per_s(self) -> float:
+        return self.gbps * 1e9 / 8
+
+    def transfer_s(self, nbytes: int, transfers: int = 1) -> float:
+        """Simulated seconds to move ``nbytes`` in ``transfers`` batched
+        round-trips — batching N keys into one transfer pays the latency
+        once, which is why the federated store coalesces copies."""
+        return transfers * self.latency_s + nbytes / self.bytes_per_s
+
+
+@dataclass
+class Site:
+    """One PRP appliance: a named cluster + its local object store."""
+    name: str
+    cluster: Cluster
+    store: ObjectStore
+    labels: Dict[str, str] = field(default_factory=dict)
+    up: bool = True
+
+    @property
+    def capacity(self) -> int:
+        """Online devices — 0 while the whole site is down."""
+        return len(self.cluster.online_devices) if self.up else 0
+
+    def queue_depth(self) -> int:
+        return self.cluster.queue_depth()
+
+
+class Fabric:
+    """The federation topology: N sites, bandwidth-modeled links, meters."""
+
+    def __init__(self, metrics: Optional[Registry] = None, *,
+                 time_scale: float = 0.0):
+        self.metrics = metrics or Registry()
+        self.time_scale = time_scale
+        self.sites: Dict[str, Site] = {}
+        self._links: Dict[Tuple[str, str], Link] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- topology
+    def add_site(self, name: str, *, devices: Optional[List[Any]] = None,
+                 cluster: Optional[Cluster] = None,
+                 store: Optional[ObjectStore] = None,
+                 store_root: Optional[str] = None, **labels) -> Site:
+        """Register a site.  Pass an existing cluster/store or let the
+        fabric build them (``devices`` list, ``store_root`` dir); every
+        site cluster shares the fabric's metrics registry."""
+        if name in self.sites:
+            raise ValueError(f"site {name!r} exists")
+        if cluster is None:
+            cluster = Cluster(devices=list(devices if devices is not None
+                                           else range(1)),
+                              metrics=self.metrics, site=name)
+        else:
+            cluster.site = name
+        if store is None:
+            if store_root is None:
+                import tempfile
+                store_root = tempfile.mkdtemp(prefix=f"fabric-{name}-")
+            store = ObjectStore(store_root)
+        site = Site(name, cluster, store, labels)
+        self.sites[name] = site
+        return site
+
+    def connect(self, a: str, b: str, *, gbps: float,
+                latency_ms: float = 0.0, symmetric: bool = True) -> None:
+        for name in (a, b):
+            if name not in self.sites:
+                raise ValueError(f"unknown site {name!r}")
+        self._links[(a, b)] = Link(a, b, gbps, latency_ms / 1e3)
+        if symmetric:
+            self._links[(b, a)] = Link(b, a, gbps, latency_ms / 1e3)
+
+    def link(self, src: str, dst: str) -> Optional[Link]:
+        """The link src->dst; None for a same-site (free) move."""
+        if src == dst:
+            return None
+        try:
+            return self._links[(src, dst)]
+        except KeyError:
+            raise ValueError(f"no link {src!r} -> {dst!r}") from None
+
+    def up_sites(self) -> List[Site]:
+        return [s for s in self.sites.values() if s.up]
+
+    # ------------------------------------------------------------ transfers
+    def transfer_s(self, src: str, dst: str, nbytes: int,
+                   transfers: int = 1) -> float:
+        link = self.link(src, dst)
+        return 0.0 if link is None else link.transfer_s(nbytes, transfers)
+
+    def transfer(self, src: str, dst: str, nbytes: int, *,
+                 transfers: int = 1) -> float:
+        """Account (and, scaled, *spend*) the cost of moving bytes.
+
+        Returns the simulated seconds.  Same-site moves are free and
+        unmetered; cross-site moves bump ``fabric/bytes_moved`` /
+        ``fabric/transfer_s`` plus per-link byte counters, then sleep
+        ``sim_s * time_scale`` so makespans reflect the network."""
+        sim_s = self.transfer_s(src, dst, nbytes, transfers)
+        if src == dst:
+            return 0.0
+        self.metrics.inc("fabric/bytes_moved", nbytes)
+        self.metrics.inc("fabric/transfer_s", sim_s)
+        self.metrics.inc("fabric/transfers", transfers)
+        self.metrics.inc(f"fabric/link/{src}->{dst}/bytes", nbytes)
+        if sim_s > 0 and self.time_scale > 0:
+            time.sleep(sim_s * self.time_scale)
+        return sim_s
+
+    # ---------------------------------------------------------- site churn
+    def fail_site(self, name: str) -> None:
+        """A whole appliance unplugs: its cluster drains every pod, its
+        replicas stop being readable, and placement must route around it."""
+        site = self.sites[name]
+        site.up = False
+        site.cluster.fail_all_nodes()
+        self.metrics.inc("fabric/site_failures")
+
+    def restore_site(self, name: str) -> None:
+        site = self.sites[name]
+        site.up = True
+        for d in list(site.cluster.devices):
+            site.cluster.join_node(d)
+
+    # ------------------------------------------------------------- compute
+    def submit(self, namespace: str, spec: JobSpec, *,
+               site: Optional[str] = None) -> Tuple[Site, Job]:
+        """Cross-site submit: run a Job on ``site``, or on the live site
+        with the most free headroom (capacity minus queue depth).  Data
+        placement belongs to the planner (repro.fabric.placement); this is
+        the compute-only path for site-agnostic jobs."""
+        if site is not None:
+            cands = [self.sites[site]]
+            if not cands[0].up:
+                raise RuntimeError(f"site {site!r} is down")
+        else:
+            need = spec.devices_per_pod * spec.replicas
+            cands = [s for s in self.up_sites() if s.capacity >= need]
+            if not cands:
+                raise RuntimeError(
+                    f"no live site has {need} devices for {spec.name!r}")
+            cands.sort(key=lambda s: (s.queue_depth() - s.capacity, s.name))
+        chosen = cands[0]
+        if namespace not in chosen.cluster.namespaces:
+            chosen.cluster.create_namespace(namespace)
+        return chosen, chosen.cluster.submit(namespace, spec)

@@ -1,0 +1,77 @@
+"""ObjectStore correctness: key-escape containment and path-aware,
+subtree-walking ``list`` (the two seed bugs fixed alongside the fabric)."""
+import pytest
+
+from repro.data.objectstore import ObjectStore
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return ObjectStore(str(tmp_path / "store"))
+
+
+# ------------------------------------------------------------- key escapes
+
+def test_path_rejects_dotdot_escape(store):
+    with pytest.raises(ValueError, match="escapes"):
+        store.put("../outside", b"x")
+
+
+def test_path_rejects_sibling_with_common_prefix(store, tmp_path):
+    """The seed's startswith() check admitted /x/store2 under root
+    /x/store — Path.relative_to is component-wise and must not."""
+    (tmp_path / "store2").mkdir()
+    (tmp_path / "store2" / "leak").write_bytes(b"secret")
+    with pytest.raises(ValueError, match="escapes"):
+        store.get("../store2/leak")
+    with pytest.raises(ValueError, match="escapes"):
+        store.put("a/../../store2/new", b"x")
+
+
+def test_path_allows_interior_dotdot(store):
+    store.put("a/b/../c", b"x")          # resolves inside the root: fine
+    assert store.get("a/c") == b"x"
+
+
+# ------------------------------------------------------------ list(prefix)
+
+def test_list_prefix_is_path_aware(store):
+    store.put("ab/y", b"1")
+    store.put("abc/x", b"2")
+    assert store.list("ab") == ["ab/y"]           # "abc/x" must NOT match
+    assert store.list("ab/") == ["ab/y"]
+    assert store.list("abc") == ["abc/x"]
+    assert sorted(store.list("")) == ["ab/y", "abc/x"]
+
+
+def test_list_exact_file_and_missing_prefix(store):
+    store.put("w/f/only", b"1")
+    assert store.list("w/f/only") == ["w/f/only"]
+    assert store.list("w/f/only/") == []          # a file is not a subtree
+    assert store.list("nope") == []
+    assert store.list("w/nope/") == []
+
+
+def test_list_walks_only_the_prefix_subtree(store, monkeypatch):
+    """Listing one workflow's keys must not rglob the whole store."""
+    for i in range(5):
+        store.put(f"other{i}/k", b"x")
+    store.put("mine/a", b"1")
+    store.put("mine/b/c", b"2")
+    walked = []
+    import pathlib
+    orig = pathlib.Path.rglob
+
+    def spy(self, pattern):
+        walked.append(str(self))
+        return orig(self, pattern)
+
+    monkeypatch.setattr(pathlib.Path, "rglob", spy)
+    assert store.list("mine/") == ["mine/a", "mine/b/c"]
+    assert walked == [str(store.root / "mine")]   # subtree only, not root
+
+
+def test_total_bytes_respects_boundary(store):
+    store.put("p", b"12345")
+    store.put("p2/big", b"x" * 100)
+    assert store.total_bytes("p") == 5
