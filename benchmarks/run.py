@@ -15,6 +15,8 @@ Outputs ``name,us_per_call,derived`` CSV rows:
   serve_*    — serving: prefill latency + decode steps/s.
   fabric_*   — multi-site federation: locality-aware vs data-blind
                placement (derived = bytes moved over the links).
+  vcluster_* — multi-tenant fair share: dominant-share scheduling vs
+               FIFO skew, preemption/resume cost, monitor event lag.
 
 ``--json PATH`` additionally writes the whole run as one trajectory
 record: every row as an object with its structured extras (``tok_s``,
@@ -320,6 +322,53 @@ def bench_fabric_placement(fast: bool):
             makespan_s=round(makespan, 3))
 
 
+def bench_vcluster_fairness(fast: bool):
+    """Multi-tenant fair share (paper §I contribution 4, §IV).
+
+    Runs ``examples/multitenant_fabric.py`` in a subprocess (it builds a
+    serving engine and an elastic trainer, so it wants a fresh jax) and
+    parses its ``VCLUSTER_REPORT``: two equal-share tenants on a
+    saturated fabric under the dominant-share scheduler vs the FIFO
+    baseline (makespan ratio vs completion skew), the trainer's
+    checkpoint-then-evict preemption cost (steps lost on resume), and
+    the monitor stream's end-to-end event lag.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, os.path.join(root, "examples",
+                                        "multitenant_fabric.py")]
+    if fast:
+        cmd.append("--fast")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"vcluster fairness bench failed:\n{out.stdout}"
+                           f"\n{out.stderr}")
+    rep = next(json.loads(l.split(" ", 1)[1]) for l in out.stdout.splitlines()
+               if l.startswith("VCLUSTER_REPORT "))
+    fair, fifo, prem = rep["fair"], rep["fifo"], rep["preemption"]
+    mk = max(fair["alice"]["makespan_s"], fair["bob"]["makespan_s"])
+    row("vcluster_fair_share", mk * 1e6,
+        f"makespan_ratio={fair['makespan_ratio']};"
+        f"fifo_skew={fifo['completion_skew']}",
+        makespan_ratio=fair["makespan_ratio"],
+        fifo_skew=fifo["completion_skew"])
+    mon = prem["monitor"]
+    row("vcluster_preempt_resume", mon["max_lag_s"] * 1e6,
+        f"steps_lost={prem['steps_lost']};"
+        f"preemptions={prem['preemptions']};"
+        f"monitor_lag_s={mon['max_lag_s']}",
+        steps_lost=prem["steps_lost"], preemptions=prem["preemptions"],
+        monitor_lag_s=mon["max_lag_s"], monitor_events=mon["received"])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -335,6 +384,7 @@ def main() -> None:
     bench_serve(args.fast)
     bench_elastic_churn(args.fast)
     bench_fabric_placement(args.fast)
+    bench_vcluster_fairness(args.fast)
     print(f"\n# {len(ROWS)} benchmark rows")
     if args.json:
         with open(args.json, "w") as f:

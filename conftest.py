@@ -1,0 +1,19 @@
+"""Shared pytest configuration.
+
+Hypothesis runs under a fixed, seeded profile so the property suites
+are deterministic in CI: ``derandomize=True`` makes example generation a
+pure function of the test body (no flaky seeds), and the deadline is
+disabled because CI boxes stall unpredictably under load.  Select an
+exploratory profile locally with ``HYPOTHESIS_PROFILE=dev``.
+"""
+import os
+
+try:
+    from hypothesis import settings
+except ImportError:                     # optional dev dependency
+    pass
+else:
+    settings.register_profile("ci", deadline=None, derandomize=True,
+                              max_examples=60, print_blob=True)
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))

@@ -12,55 +12,108 @@ import threading
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 @dataclass
 class Series:
+    """One metric stream.  Pod/worker threads append concurrently while
+    dashboards summarize, so every read derives from ONE locked snapshot —
+    the registry's dict lock alone cannot make count/mean/total agree."""
     points: List[Tuple[float, float]] = field(default_factory=list)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def record(self, value: float, ts: Optional[float] = None):
-        self.points.append((time.time() if ts is None else ts, float(value)))
+        with self._lock:
+            self.points.append((time.time() if ts is None else ts,
+                                float(value)))
+
+    def snapshot(self) -> List[Tuple[float, float]]:
+        """A consistent copy of the points at one instant."""
+        with self._lock:
+            return list(self.points)
 
     @property
     def last(self) -> float:
-        return self.points[-1][1] if self.points else 0.0
+        with self._lock:
+            return self.points[-1][1] if self.points else 0.0
 
     @property
     def total(self) -> float:
-        return sum(v for _, v in self.points)
+        return sum(v for _, v in self.snapshot())
 
     @property
     def mean(self) -> float:
-        return self.total / len(self.points) if self.points else 0.0
+        pts = self.snapshot()
+        return sum(v for _, v in pts) / len(pts) if pts else 0.0
 
     @property
     def max(self) -> float:
-        return max((v for _, v in self.points), default=0.0)
+        return max((v for _, v in self.snapshot()), default=0.0)
 
     def percentile(self, q: float) -> float:
         """Nearest-rank percentile of recorded values, q in [0, 100]."""
-        if not self.points:
+        vals = sorted(v for _, v in self.snapshot())
+        if not vals:
             return 0.0
-        vals = sorted(v for _, v in self.points)
         rank = min(len(vals) - 1, max(0, int(round(q / 100 * (len(vals) - 1)))))
         return vals[rank]
+
+    def stats(self) -> Dict[str, float]:
+        """count/last/mean/max/total/p50/p99 from a SINGLE snapshot, so
+        the numbers are mutually consistent even under concurrent
+        ``record`` calls (count * mean == total, always)."""
+        pts = self.snapshot()
+        vals = sorted(v for _, v in pts)
+        n = len(vals)
+
+        def pct(q):
+            if not n:
+                return 0.0
+            return vals[min(n - 1, max(0, int(round(q / 100 * (n - 1)))))]
+
+        total = sum(vals)
+        return {"count": n, "last": pts[-1][1] if pts else 0.0,
+                "mean": total / n if n else 0.0,
+                "max": vals[-1] if n else 0.0, "total": total,
+                "p50": pct(50), "p99": pct(99)}
 
 
 class Registry:
     def __init__(self):
         self._lock = threading.Lock()
         self._series: Dict[str, Series] = {}
+        # listeners get (name, value, ts) on every inc/gauge/timer — the
+        # near-real-time monitor (repro.vcluster.monitor) taps this to
+        # stream throughput gauges without polling
+        self._listeners: List[Callable[[str, float, float], None]] = []
 
     def series(self, name: str) -> Series:
         with self._lock:
             return self._series.setdefault(name, Series())
 
+    def add_listener(self, cb: Callable[[str, float, float], None]) -> None:
+        """Register cb(name, value, ts) on every recorded point.
+        Listener exceptions are swallowed: observability must never take
+        down the thing it observes."""
+        with self._lock:
+            self._listeners.append(cb)
+
+    def _notify(self, name: str, value: float) -> None:
+        for cb in list(self._listeners):
+            try:
+                cb(name, value, time.time())
+            except Exception:
+                pass
+
     def inc(self, name: str, value: float = 1.0):
         self.series(name).record(value)
+        self._notify(name, value)
 
     def gauge(self, name: str, value: float):
         self.series(name).record(value)
+        self._notify(name, value)
 
     @contextmanager
     def timer(self, name: str):
@@ -68,7 +121,9 @@ class Registry:
         try:
             yield
         finally:
-            self.series(name).record(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            self.series(name).record(dt)
+            self._notify(name, dt)
 
     def scrape(self) -> Dict[str, float]:
         with self._lock:
@@ -76,20 +131,19 @@ class Registry:
 
     def summary(self) -> Dict[str, Dict[str, float]]:
         """Per-series stats (count/last/mean/max/total/p50/p99) — the
-        scrape endpoint a serving dashboard (paper §VI) would poll."""
+        scrape endpoint a serving dashboard (paper §VI) would poll.
+        Each series is summarized from one atomic snapshot, so its stats
+        are mutually consistent under concurrent recording."""
         with self._lock:
-            return {k: {"count": len(s.points), "last": s.last,
-                        "mean": s.mean, "max": s.max, "total": s.total,
-                        "p50": s.percentile(50), "p99": s.percentile(99)}
-                    for k, s in self._series.items()}
+            series = dict(self._series)
+        return {k: s.stats() for k, s in series.items()}
 
     def to_csv(self) -> str:
         lines = ["metric,count,last,mean,max,total"]
-        with self._lock:
-            for k in sorted(self._series):
-                s = self._series[k]
-                lines.append(f"{k},{len(s.points)},{s.last:.6g},{s.mean:.6g},"
-                             f"{s.max:.6g},{s.total:.6g}")
+        for k, st in sorted(self.summary().items()):
+            lines.append(f"{k},{st['count']},{st['last']:.6g},"
+                         f"{st['mean']:.6g},{st['max']:.6g},"
+                         f"{st['total']:.6g}")
         return "\n".join(lines)
 
 

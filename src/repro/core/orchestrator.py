@@ -14,7 +14,12 @@ Kubernetes semantics reproduced:
   * nodes joining/leaving: a NodeFailure drains the pods running on the
     failed device — they go FAILED, their leases are released, and the
     reconciler reschedules them onto fresh devices (§V), which pairs with
-    checkpoint auto-resume in repro.checkpoint for full fault tolerance.
+    checkpoint auto-resume in repro.checkpoint for full fault tolerance;
+  * preemption: ``preempt_pod`` is the checkpoint-then-evict drain the
+    multi-tenant fair-share scheduler (repro.vcluster) uses — cooperative
+    like a node drain, but the pod is EXPECTED to save state on the way
+    out, lands in the terminal PREEMPTED state, and is never respawned by
+    the reconciler (the tenant scheduler owns resubmission).
 
 Pods run python callables in threads (this container is one host); on a real
 TPU fleet each pod is a host process pinned to its mesh slice — the Job/Pod
@@ -40,6 +45,13 @@ class PodState(str, Enum):
     RUNNING = "Running"
     SUCCEEDED = "Succeeded"
     FAILED = "Failed"
+    # evicted by the fair-share scheduler (repro.vcluster): terminal like
+    # FAILED, but the reconciler never respawns it — the tenant scheduler
+    # owns the resubmission (the pod checkpointed before exiting)
+    PREEMPTED = "Preempted"
+
+
+TERMINAL_STATES = (PodState.SUCCEEDED, PodState.FAILED, PodState.PREEMPTED)
 
 
 @dataclass
@@ -59,10 +71,14 @@ class PodCtx:
     attempt: int = 0
     site: str = "local"       # which federation site's cluster runs this pod
     stop: threading.Event = field(default_factory=threading.Event)
+    # graceful eviction (fair-share preemption): unlike ``stop`` — whose
+    # node is gone — the hardware is healthy, so the pod is expected to
+    # checkpoint before exiting (checkpoint-then-evict)
+    preempt: threading.Event = field(default_factory=threading.Event)
 
     def should_stop(self) -> bool:
         """Cooperative drain signal (set on NodeFailure / preemption)."""
-        return self.stop.is_set()
+        return self.stop.is_set() or self.preempt.is_set()
 
 
 @dataclass
@@ -88,6 +104,9 @@ class JobSpec:
     replicas: int = 1
     devices_per_pod: int = 0             # 0 = CPU-only pod (e.g. download)
     backoff_limit: int = 3
+    # scheduling priority (repro.vcluster): higher may preempt strictly
+    # lower.  None inherits the submitting tenant's priority.
+    priority: Optional[int] = None
 
 
 class Job:
@@ -105,6 +124,16 @@ class Job:
     def failed(self) -> bool:
         return any(p.state == PodState.FAILED and
                    p.restarts >= self.spec.backoff_limit for p in self.pods)
+
+    @property
+    def terminal(self) -> bool:
+        """Every pod reached a terminal state (no thread is still live)."""
+        return (len(self.pods) == self.spec.replicas and
+                all(p.state in TERMINAL_STATES for p in self.pods))
+
+    @property
+    def preempted(self) -> bool:
+        return any(p.state == PodState.PREEMPTED for p in self.pods)
 
     def results(self) -> List[Any]:
         return [p.result for p in self.pods]
@@ -133,6 +162,7 @@ class Cluster:
         self.jobs: List[Job] = []
         self.metrics = metrics or Registry()
         self._watchers: List[Callable[[str, Any], None]] = []
+        self._pod_watchers: List[Callable[[str, Pod], None]] = []
 
     # ------------------------------------------------------------ namespaces
     def create_namespace(self, name: str, device_quota: Optional[int] = None,
@@ -144,6 +174,19 @@ class Cluster:
             ns = Namespace(name, q, labels)
             self.namespaces[name] = ns
             return ns
+
+    def set_quota(self, namespace: str, device_quota: int) -> None:
+        """Adjust a namespace's device quota (the vcluster scheduler's
+        per-tenant accounting knob).  May drop below current usage: live
+        leases are honored, only future allocations are blocked."""
+        with self._lock:
+            self.namespaces[namespace].device_quota = device_quota
+
+    def free_devices(self) -> int:
+        """Online devices not leased to any live pod."""
+        with self._lock:
+            return sum(1 for d in self.devices
+                       if d not in self.offline and d not in self.leased)
 
     def _allocate_locked(self, ns: Namespace, n: int) -> List[Any]:
         """Lease `n` devices to a pod.  Caller holds self._lock.
@@ -213,6 +256,7 @@ class Cluster:
                     return
                 pod.state = PodState.RUNNING
             self.metrics.inc(f"pods_running/{pod.ctx.namespace}")
+            self._notify_pod("running", pod)
             try:
                 result, err = pod.fn(pod.ctx), None
             except Exception as e:       # reconciler may respawn
@@ -221,19 +265,34 @@ class Cluster:
             with self._lock:
                 if pod.gen != gen:       # a respawned attempt owns the pod now
                     return
+                # only a RUNNING pod changes state here; a drained one was
+                # already flipped (and notified) by fail_node/preempt
+                changed = pod.state == PodState.RUNNING
                 if err is None:
                     pod.result = result
                     # a drained pod may still finish cooperatively — keep the
                     # result (e.g. its "preempted at step k" marker) but do
                     # not resurrect the FAILED state fail_node assigned.
                     if pod.state == PodState.RUNNING:
-                        pod.state = PodState.SUCCEEDED
+                        # a preempt-drained pod that exits cleanly made its
+                        # checkpoint: terminal PREEMPTED, never respawned
+                        pod.state = PodState.PREEMPTED \
+                            if pod.ctx.preempt.is_set() else PodState.SUCCEEDED
                 else:
                     if pod.state == PodState.RUNNING:
                         pod.error = err
-                        pod.state = PodState.FAILED
-                        self.metrics.inc(f"pod_failures/{pod.ctx.namespace}")
+                        if pod.ctx.preempt.is_set():
+                            # crashed while winding down from a preempt:
+                            # still an eviction, not a respawnable failure
+                            pod.state = PodState.PREEMPTED
+                        else:
+                            pod.state = PodState.FAILED
+                            self.metrics.inc(
+                                f"pod_failures/{pod.ctx.namespace}")
                 self._release_pod_locked(pod)   # terminal -> return the lease
+                final = pod.state
+            if changed:
+                self._notify_pod(final.name.lower(), pod)
 
         pod.thread = threading.Thread(target=run, name=pod.pod_id)
         pod.thread.start()
@@ -272,31 +331,112 @@ class Cluster:
                     pod.holds_devices = bool(devs)
                     pod.error = None
                     pod.state = PodState.PENDING
+                self._notify_pod("respawned", pod)
                 self._start_pod(pod)
                 respawned += 1
         return respawned
 
     def wait(self, job: Job, *, reconcile_every: float = 0.01,
              timeout: float = 600.0) -> Job:
-        """Block until the job succeeds or exhausts its backoff limit."""
+        """Block until the job succeeds or exhausts its backoff limit.
+
+        The deadline is enforced ACROSS the per-pod joins, not just per
+        controller pass: with many pods, one outer iteration used to cost
+        ``len(pods) * reconcile_every`` seconds, overshooting a short
+        timeout by orders of magnitude when pods hang."""
         deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
+        while True:
             for pod in job.pods:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
                 if pod.thread is not None:
-                    pod.thread.join(timeout=reconcile_every)
+                    pod.thread.join(timeout=min(reconcile_every, remaining))
             if job.succeeded:
                 return job
             if job.failed:
                 errs = [p.error for p in job.pods if p.error]
                 raise RuntimeError(
                     f"job {job.spec.name} failed after backoff: {errs[:1]}")
+            if time.monotonic() >= deadline:
+                raise TimeoutError(f"job {job.spec.name} timed out")
             self.reconcile()
-        raise TimeoutError(f"job {job.spec.name} timed out")
+
+    # ------------------------------------------------------ preemption (§IV)
+    def preempt_pod(self, pod: Pod, *, reason: str = "fair-share") -> bool:
+        """Checkpoint-then-evict: the cooperative ``preempt`` drain.
+
+        Unlike ``fail_node`` the hardware is healthy, so the pod is ASKED
+        to leave: its ``PodCtx.preempt`` event is set, a cooperative fn
+        (e.g. an elastic training segment) checkpoints and exits, and the
+        pod lands in the terminal PREEMPTED state — which ``reconcile``
+        never respawns; whoever preempted it (the repro.vcluster
+        fair-share scheduler) owns the resubmission.  A still-PENDING pod
+        is evicted immediately.  Returns False if the pod was already
+        terminal."""
+        with self._lock:
+            if pod.state == PodState.PENDING:
+                pod.state = PodState.PREEMPTED
+                pod.error = f"Preempted: {reason}"
+                pod.ctx.preempt.set()
+                self._release_pod_locked(pod)
+                notify = "preempted"
+            elif pod.state == PodState.RUNNING:
+                pod.ctx.preempt.set()
+                pod.error = f"Preempted: {reason}"
+                notify = "preempt-requested"
+            else:
+                return False
+        self.metrics.inc(f"pod_preempted/{pod.ctx.namespace}")
+        self._notify_pod(notify, pod)
+        return True
+
+    def retire_pod(self, pod: Pod) -> bool:
+        """Take a FAILED pod out of the reconciler's respawn set by
+        flipping it to terminal PREEMPTED.  Used when an external
+        scheduler requeues the whole job: a later ``reconcile`` must not
+        ALSO respawn the stale pod, or the work runs twice."""
+        with self._lock:
+            if pod.state != PodState.FAILED:
+                return False
+            pod.state = PodState.PREEMPTED
+            return True
+
+    def finish_preempt(self, pod: Pod) -> bool:
+        """Grace expired: hard-evict a preempt-drained pod that has not
+        exited.  The pod goes terminal PREEMPTED and its lease returns;
+        the zombie thread is fenced by ``Pod.gen``/state checks and its
+        late result, if any, is still recorded."""
+        with self._lock:
+            if not pod.ctx.preempt.is_set() or \
+                    pod.state not in (PodState.PENDING, PodState.RUNNING):
+                return False
+            pod.state = PodState.PREEMPTED
+            pod.ctx.stop.set()
+            self._release_pod_locked(pod)
+        self.metrics.inc(f"pod_preempt_hard/{pod.ctx.namespace}")
+        self._notify_pod("preempted", pod)
+        return True
 
     # ------------------------------------------------------- node churn (§V)
     def add_watcher(self, cb: Callable[[str, Any], None]) -> None:
         """Register cb(event, device) for node churn ("fail" | "join")."""
         self._watchers.append(cb)
+
+    def add_pod_watcher(self, cb: Callable[[str, Pod], None]) -> None:
+        """Register cb(event, pod) for pod lifecycle transitions: one of
+        "running" | "succeeded" | "failed" | "preempted" |
+        "preempt-requested" | "respawned".  Feeds the near-real-time
+        monitor (repro.vcluster.monitor); observer errors are swallowed
+        so a broken subscriber cannot take down the controller."""
+        self._pod_watchers.append(cb)
+
+    def _notify_pod(self, event: str, pod: Pod) -> None:
+        for cb in list(self._pod_watchers):
+            try:
+                cb(event, pod)
+            except Exception:       # observers must never break the loop
+                pass
 
     def fail_node(self, device) -> None:
         """A node drops out: mark it offline AND drain the pods on it.
@@ -305,9 +445,9 @@ class Cluster:
         it onto surviving devices), releases its lease, and sets its
         ``PodCtx.stop`` event so a cooperative fn can checkpoint and exit.
         """
+        drained_pods: List[Pod] = []
         with self._lock:
             self.offline.add(device)
-            drained = 0
             for job in self.jobs:
                 for pod in job.pods:
                     if pod.state in (PodState.PENDING, PodState.RUNNING) \
@@ -317,9 +457,11 @@ class Cluster:
                                      f"went offline")
                         pod.ctx.stop.set()
                         self._release_pod_locked(pod)
-                        drained += 1
-        if drained:
-            self.metrics.inc("node_drained_pods", drained)
+                        drained_pods.append(pod)
+        if drained_pods:
+            self.metrics.inc("node_drained_pods", len(drained_pods))
+        for pod in drained_pods:
+            self._notify_pod("failed", pod)
         for cb in list(self._watchers):
             cb("fail", device)
 
@@ -332,8 +474,8 @@ class Cluster:
         single-cluster reconciler — surviving *sites* pick up the work."""
         for d in list(self.devices):
             self.fail_node(d)
+        drained_pods: List[Pod] = []
         with self._lock:
-            drained = 0
             for job in self.jobs:
                 for pod in job.pods:
                     if pod.state in (PodState.PENDING, PodState.RUNNING):
@@ -341,9 +483,11 @@ class Cluster:
                         pod.error = "NodeFailure: whole site went offline"
                         pod.ctx.stop.set()
                         self._release_pod_locked(pod)
-                        drained += 1
-        if drained:
-            self.metrics.inc("node_drained_pods", drained)
+                        drained_pods.append(pod)
+        if drained_pods:
+            self.metrics.inc("node_drained_pods", len(drained_pods))
+        for pod in drained_pods:
+            self._notify_pod("failed", pod)
 
     def queue_depth(self) -> int:
         """Pods admitted but not yet terminal — the congestion signal the

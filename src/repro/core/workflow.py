@@ -73,12 +73,15 @@ class Workflow:
     def __init__(self, name: str, *, cluster: Optional[Cluster] = None,
                  store: Optional[ObjectStore] = None,
                  metrics: Optional[Registry] = None,
-                 namespace: str = "default", planner=None):
+                 namespace: str = "default", planner=None, bus=None):
         """Single-cluster mode needs ``cluster`` + ``store``; federated
         mode needs a ``repro.fabric.PlacementPlanner`` and places each
-        step on the fabric instead."""
+        step on the fabric instead.  ``bus`` (a
+        ``repro.vcluster.monitor.EventBus``) streams per-step lifecycle
+        events — placed / done / skipped — to live subscribers."""
         self.name = name
         self.planner = planner
+        self.bus = bus
         if planner is None and (cluster is None or store is None):
             raise TypeError("Workflow needs cluster+store, or a planner")
         self.cluster = cluster
@@ -156,12 +159,18 @@ class Workflow:
         self.planner.prestage(step.inputs, placement.site)
         return site.cluster, self.planner.fed.view(placement.site), placement
 
+    def _emit(self, step: str, status: str, **data) -> None:
+        if self.bus is not None:
+            self.bus.publish("step", source=self.name, step=step,
+                             status=status, **data)
+
     def _run_step(self, step: Step, resume: bool) -> None:
         marker = step.marker_key(self.name)
         if resume and self._ctrl().exists(marker):
             self.results[step.name] = json.loads(
                 self._ctrl().get(step.output_key(self.name)))
             self.metrics.inc(f"workflow/{self.name}/{step.name}/skipped")
+            self._emit(step.name, "skipped")
             return
 
         report = StepReport(step=step.name, pods=step.pods,
@@ -181,6 +190,9 @@ class Workflow:
                 fmetrics.inc("fabric/migrations")
         else:
             cluster, store, placement = self.cluster, self.store, None
+        self._emit(step.name, "placed",
+                   site=placement.site if placement else "local",
+                   mode=placement.mode if placement else "local")
         ctx = StepCtx(cluster=cluster, store=store,
                       metrics=self.metrics, namespace=self.namespace,
                       inputs={d: self.results[d] for d in step.deps},
@@ -220,6 +232,9 @@ class Workflow:
             report.extra["transfer_s"] = \
                 fmetrics.series("fabric/transfer_s").total - sim0
         self.reports.append(report)
+        self._emit(step.name, "done", site=report.site or "local",
+                   seconds=round(report.total_time_s, 4),
+                   bytes_moved=int(report.extra.get("bytes_moved", 0)))
 
     # ------------------------------------------------------------- reporting
     def table_one(self) -> str:

@@ -303,11 +303,14 @@ class ElasticTrainer:
             start >= spec.steps
         # graceful preemptions (scale-up) always persist their last step;
         # drained pods only do so when the spec pretends the node survived.
+        # A scheduler preemption (ctx.preempt — fair-share eviction via
+        # Cluster.preempt_pod) is checkpoint-then-evict by contract: the
+        # hardware is healthy, so the goodbye save always happens.
         # A COMPLETED run skips the terminal save when nobody could ever
         # read it (checkpointing off + trainer-owned throwaway store):
         # that save is a full host transfer of params+opt for nothing.
         want_final_save = (not preempted) or graceful.is_set() \
-            or spec.save_on_drain
+            or ctx.preempt.is_set() or spec.save_on_drain
         if done and self._ephemeral_store and not spec.ckpt_every:
             want_final_save = False
         if last >= start and saved_at != last and want_final_save:
@@ -339,8 +342,8 @@ class ElasticTrainer:
         pod = job.pods[0]
         while pod.state in (PodState.PENDING, PodState.RUNNING):
             time.sleep(spec.poll_s)
-            if pod.ctx.stop.is_set():
-                continue
+            if pod.ctx.stop.is_set() or pod.ctx.preempt.is_set():
+                continue        # draining already — never grow a dying pod
             try:
                 grow = self.controller.decide(decision)
             except RuntimeError:
@@ -470,7 +473,15 @@ class ElasticTrainer:
                 done = True
                 outcome = "done"
             else:
+                # graceful scale-up preempt OR a fair-share eviction
+                # (Cluster.preempt_pod): both checkpointed; the eviction
+                # resumes once the vcluster scheduler re-grants devices
                 outcome = "preempted"
+                if pod.state == PodState.PREEMPTED:
+                    self.metrics.inc("elastic/preemptions")
+                    if spec.verbose:
+                        print(f"[elastic] segment {seg_idx} preempted "
+                              f"({pod.error}) -> awaiting re-grant")
             # a crashed pod (res None) is still one segment of history:
             # reconstruct its extent from the trainer-side progress marks
             start = res.start if res is not None else self._seg_start

@@ -143,11 +143,13 @@ class FederatedStore:
         if not self.fabric.sites[site].up:
             raise RuntimeError(f"site {site!r} is down")
 
-    def replicate(self, key: str, dst: str) -> float:
+    def replicate(self, key: str, dst: str, *, tenant: str = "") -> float:
         """Copy ``key`` to ``dst`` (no-op if already there).  Returns the
         simulated transfer seconds.  In-flight copies of the same
         (key, dst) are deduped: the second caller waits on the first
-        transfer instead of moving the bytes twice."""
+        transfer instead of moving the bytes twice.  ``tenant`` tags the
+        link accounting (the mover's tenant is billed; deduped waiters
+        pay nothing)."""
         self._require_up(dst)
         while True:
             with self._lock:
@@ -168,7 +170,8 @@ class FederatedStore:
             try:
                 src = self._best_src(key, dst)
                 data = self.fabric.sites[src].store.get(key)
-                sim_s = self.fabric.transfer(src, dst, len(data))
+                sim_s = self.fabric.transfer(src, dst, len(data),
+                                             tenant=tenant)
                 self.fabric.sites[dst].store.put(key, data)
                 self.register(key, dst, len(data))
                 return sim_s
@@ -177,8 +180,8 @@ class FederatedStore:
                     self._inflight.pop((key, dst), None)
                 ev.set()
 
-    def replicate_many(self, keys: Iterable[str],
-                       dst: str) -> Tuple[int, float]:
+    def replicate_many(self, keys: Iterable[str], dst: str, *,
+                       tenant: str = "") -> Tuple[int, float]:
         """Pre-stage a set of keys at ``dst``, batched by source site so
         each (src, dst) pair pays ONE link latency for the whole group.
         Unknown/unreachable keys are skipped (outputs yet to be produced,
@@ -199,7 +202,8 @@ class FederatedStore:
         for src, group in sorted(by_src.items()):
             blobs = [(k, self.fabric.sites[src].store.get(k)) for k in group]
             nbytes = sum(len(d) for _, d in blobs)
-            sim_total += self.fabric.transfer(src, dst, nbytes, transfers=1)
+            sim_total += self.fabric.transfer(src, dst, nbytes, transfers=1,
+                                              tenant=tenant)
             for k, d in blobs:
                 self.fabric.sites[dst].store.put(k, d)
                 self.register(k, dst, len(d))
@@ -208,9 +212,11 @@ class FederatedStore:
 
     # ---------------------------------------------------------------- views
     def view(self, site: str, *, mirror: Optional[str] = None,
-             mirror_prefixes: Sequence[str] = ("checkpoints/",)) -> "SiteStore":
+             mirror_prefixes: Sequence[str] = ("checkpoints/",),
+             tenant: str = "") -> "SiteStore":
         return SiteStore(self, site, mirror=mirror,
-                         mirror_prefixes=tuple(mirror_prefixes))
+                         mirror_prefixes=tuple(mirror_prefixes),
+                         tenant=tenant)
 
 
 class SiteStore(BlobCodecs):
@@ -225,11 +231,13 @@ class SiteStore(BlobCodecs):
 
     def __init__(self, fed: FederatedStore, site: str, *,
                  mirror: Optional[str] = None,
-                 mirror_prefixes: Tuple[str, ...] = ("checkpoints/",)):
+                 mirror_prefixes: Tuple[str, ...] = ("checkpoints/",),
+                 tenant: str = ""):
         self.fed = fed
         self.site = site
         self.mirror = mirror
         self.mirror_prefixes = mirror_prefixes
+        self.tenant = tenant        # bills this view's pulls/mirrors
 
     @property
     def root(self):
@@ -239,13 +247,15 @@ class SiteStore(BlobCodecs):
         self.fed.put(key, data, self.site)
         if self.mirror and any(_under(key, p) for p in self.mirror_prefixes):
             if self.fed.fabric.sites[self.mirror].up:
-                self.fed.replicate(key, self.mirror)
+                self.fed.replicate(key, self.mirror, tenant=self.tenant)
             else:
                 self.fed.metrics.inc("fabric/mirror_skipped")
 
     def get(self, key: str) -> bytes:
         if not self.fed.exists(key):
             raise FileNotFoundError(key)
+        if self.tenant:
+            self.fed.replicate(key, self.site, tenant=self.tenant)
         return self.fed.get(key, self.site)
 
     def exists(self, key: str) -> bool:

@@ -46,11 +46,17 @@ class Placement:
 
 class PlacementPlanner:
     def __init__(self, fed: FederatedStore, *, queue_cost_s: float = 0.05,
-                 data_blind: bool = False):
+                 data_blind: bool = False, tenant: str = ""):
+        """``tenant`` makes the planner multi-tenant-aware: staging moves
+        are billed to the tenant's byte counters, and site scores include
+        the backlog OTHER tenants' in-flight transfers queue on the links
+        the staging would use — so one tenant's pre-staging cannot
+        starve another tenant's routes (repro.vcluster)."""
         self.fed = fed
         self.fabric = fed.fabric
         self.queue_cost_s = queue_cost_s
         self.data_blind = data_blind
+        self.tenant = tenant
         self._rr = 0                     # data-blind round-robin cursor
 
     # -------------------------------------------------------------- scoring
@@ -86,7 +92,9 @@ class PlacementPlanner:
                 continue
             by_src[src] = by_src.get(src, 0) + self.fed.nbytes(key)
         missing = sum(by_src.values())
-        est_s = sum(self.fabric.transfer_s(src, site, n, transfers=1)
+        est_s = sum(self.fabric.transfer_s(src, site, n, transfers=1) +
+                    self.fabric.link_backlog_s(
+                        src, site, exclude_tenant=self.tenant or None)
                     for src, n in by_src.items())
         if unreachable:
             est_s = float("inf")
@@ -98,8 +106,11 @@ class PlacementPlanner:
 
     # ------------------------------------------------------------ placement
     def candidates(self, devices: int = 0) -> List[Site]:
+        """Live sites that can host the step.  A zero-capacity site (all
+        nodes offline) is never a candidate, even for a device-less step:
+        its cluster would drain any pod the moment it landed."""
         return [s for s in self.fabric.up_sites()
-                if s.capacity >= max(devices, 0)]
+                if s.capacity >= max(devices, 1)]
 
     def place(self, inputs: Sequence[str] = (), *,
               devices: int = 0) -> Placement:
@@ -140,4 +151,5 @@ class PlacementPlanner:
     def prestage(self, inputs: Sequence[str],
                  site: str) -> Tuple[int, float]:
         """Move a step's missing inputs to its site ahead of execution."""
-        return self.fed.replicate_many(self.expand(inputs), site)
+        return self.fed.replicate_many(self.expand(inputs), site,
+                                       tenant=self.tenant)

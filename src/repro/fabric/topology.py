@@ -26,8 +26,9 @@ from __future__ import annotations
 
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.metrics import Registry
 from repro.core.orchestrator import Cluster, Job, JobSpec
@@ -81,6 +82,14 @@ class Fabric:
         self.sites: Dict[str, Site] = {}
         self._links: Dict[Tuple[str, str], Link] = {}
         self._lock = threading.Lock()
+        # in-flight bytes per (link, tenant) — the backlog a tenant-aware
+        # placement scorer reads so one tenant's pre-staging cannot
+        # silently starve another tenant's links (repro.vcluster)
+        self._inflight: Dict[Tuple[str, str], Dict[str, int]] = {}
+        # transfer watchers: cb(src, dst, nbytes, sim_s, tenant) after
+        # every metered cross-site move (feeds the monitor event bus)
+        self._watchers: List[Callable[[str, str, int, float, str],
+                                      None]] = []
 
     # ------------------------------------------------------------- topology
     def add_site(self, name: str, *, devices: Optional[List[Any]] = None,
@@ -134,14 +143,62 @@ class Fabric:
         link = self.link(src, dst)
         return 0.0 if link is None else link.transfer_s(nbytes, transfers)
 
+    def add_watcher(self, cb: Callable[[str, str, int, float, str],
+                                       None]) -> None:
+        """Register cb(src, dst, nbytes, sim_s, tenant) per transfer."""
+        self._watchers.append(cb)
+
+    @contextmanager
+    def reserve(self, src: str, dst: str, nbytes: int, tenant: str = ""):
+        """Mark bytes as in flight on a link for the block's duration —
+        the backlog other tenants' placement scoring sees.  ``transfer``
+        wraps its sleep in this; tests can use it directly to simulate a
+        long-running competing transfer."""
+        key = (src, dst)
+        with self._lock:
+            q = self._inflight.setdefault(key, {})
+            q[tenant] = q.get(tenant, 0) + nbytes
+        try:
+            yield
+        finally:
+            with self._lock:
+                q = self._inflight.get(key, {})
+                left = q.get(tenant, 0) - nbytes
+                if left > 0:
+                    q[tenant] = left
+                else:
+                    q.pop(tenant, None)
+                if not q:
+                    self._inflight.pop(key, None)
+
+    def link_backlog_s(self, src: str, dst: str, *,
+                       exclude_tenant: Optional[str] = None) -> float:
+        """Simulated seconds of OTHER tenants' in-flight bytes queued on
+        src->dst — the fair-share penalty a tenant-aware planner adds so
+        one tenant's pre-staging cannot starve another's links.  0 for
+        same-site or unconfigured routes."""
+        if src == dst:
+            return 0.0
+        try:
+            link = self.link(src, dst)
+        except ValueError:
+            return 0.0
+        with self._lock:
+            q = self._inflight.get((src, dst), {})
+            pending = sum(b for t, b in q.items()
+                          if exclude_tenant is None or t != exclude_tenant)
+        return pending / link.bytes_per_s
+
     def transfer(self, src: str, dst: str, nbytes: int, *,
-                 transfers: int = 1) -> float:
+                 transfers: int = 1, tenant: str = "") -> float:
         """Account (and, scaled, *spend*) the cost of moving bytes.
 
         Returns the simulated seconds.  Same-site moves are free and
         unmetered; cross-site moves bump ``fabric/bytes_moved`` /
         ``fabric/transfer_s`` plus per-link byte counters, then sleep
-        ``sim_s * time_scale`` so makespans reflect the network."""
+        ``sim_s * time_scale`` so makespans reflect the network.  A
+        ``tenant`` tag additionally meters the tenant's own byte counter
+        and registers the bytes as link backlog while they move."""
         sim_s = self.transfer_s(src, dst, nbytes, transfers)
         if src == dst:
             return 0.0
@@ -149,8 +206,16 @@ class Fabric:
         self.metrics.inc("fabric/transfer_s", sim_s)
         self.metrics.inc("fabric/transfers", transfers)
         self.metrics.inc(f"fabric/link/{src}->{dst}/bytes", nbytes)
+        if tenant:
+            self.metrics.inc(f"fabric/tenant/{tenant}/bytes_moved", nbytes)
         if sim_s > 0 and self.time_scale > 0:
-            time.sleep(sim_s * self.time_scale)
+            with self.reserve(src, dst, nbytes, tenant):
+                time.sleep(sim_s * self.time_scale)
+        for cb in list(self._watchers):
+            try:
+                cb(src, dst, nbytes, sim_s, tenant)
+            except Exception:   # observers must not break the data plane
+                pass
         return sim_s
 
     # ---------------------------------------------------------- site churn

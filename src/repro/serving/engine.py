@@ -149,7 +149,7 @@ class ServingEngine:
     # ----------------------------------------------------------- main loop
     def run(self, queue: WorkQueue, *, worker: str = "server",
             default_max_new: Optional[int] = None, idle_wait: float = 1e-3,
-            ) -> Tuple[Dict[Any, list], Registry]:
+            should_stop=None) -> Tuple[Dict[Any, list], Registry]:
         """Serve the queue to exhaustion with continuous batching.
 
         Admission, eviction and lease heartbeats happen between fused
@@ -157,6 +157,12 @@ class ServingEngine:
         next queued request immediately (no drain-then-refill barrier).
         Returns ``(results, metrics)`` with ``results[rid]`` the generated
         tokens (length == the request's stop length).
+
+        ``should_stop`` (a zero-arg callable, e.g. ``PodCtx.should_stop``
+        when the engine runs as a preemptible tenant pod under
+        repro.vcluster) is polled between fused steps: when it goes true
+        the loop exits cleanly, in-flight requests' leases expire back to
+        the queue, and a re-placed engine resumes serving them.
         """
         cap = self.cache_len - self.prompt_pad
         sched = ContinuousScheduler(
@@ -167,6 +173,11 @@ class ServingEngine:
         decode_s = 0.0
         with self.mesh:
             while True:
+                if should_stop is not None and should_stop():
+                    # preempted between steps: unfinished slots are NOT
+                    # acked — their queue leases expire and requeue
+                    self.metrics.inc("serve/preempted")
+                    break
                 for slot in sched.admit():
                     # engine capacity bounds the stop length: past
                     # prompt_pad+cap the cache has no row to write

@@ -1,0 +1,14 @@
+"""Multi-tenant virtual clusters (paper §I contribution 4, §IV): tenant
+slices of the federation, a dominant-share fair scheduler with
+checkpoint-then-evict preemption, and the near-real-time monitor bus."""
+from repro.vcluster.monitor import Event, EventBus, Subscription
+from repro.vcluster.scheduler import (CapacityClaim, FairShareScheduler,
+                                      TenantJob)
+from repro.vcluster.tenant import (TenantClusterView, TenantSpec,
+                                   VirtualCluster)
+
+__all__ = [
+    "Event", "EventBus", "Subscription",
+    "CapacityClaim", "FairShareScheduler", "TenantJob",
+    "TenantClusterView", "TenantSpec", "VirtualCluster",
+]

@@ -126,6 +126,43 @@ def test_replicate_dedupes_inflight(tmp_path):
     assert fed.where("big") == ["s0", "s1"]
 
 
+def test_replicate_concurrent_billing_exactly_once(tmp_path):
+    """Regression (in-flight dedup accounting): N threads replicating the
+    same (key, dst) must bill exactly ONE transfer — one bytes_moved
+    increment, one link transfer — and EVERY caller must observe the
+    replica at dst by the time its replicate() returns."""
+    fabric = mk_fabric(tmp_path, time_scale=0.001)   # widen the race window
+    fed = FederatedStore(fabric)
+    fed.put("hot", b"z" * 100_000, "s0")
+    n = 8
+    start = threading.Barrier(n, timeout=10)
+    observed, errors = [], []
+
+    def pull():
+        try:
+            start.wait()
+            fed.replicate("hot", "s1")
+            # the caller's contract: after return, the replica exists
+            observed.append("s1" in fed.where("hot") and
+                            fabric.sites["s1"].store.exists("hot"))
+        except Exception as e:          # pragma: no cover - failure capture
+            errors.append(e)
+
+    threads = [threading.Thread(target=pull) for _ in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors, errors[:1]
+    assert all(observed) and len(observed) == n
+    m = fabric.metrics
+    assert m.series("fabric/bytes_moved").total == 100_000   # billed once
+    assert m.series("fabric/transfers").total == 1
+    assert m.series("fabric/link/s0->s1/bytes").total == 100_000
+    # the losers of the race were deduped, not re-transferred
+    assert m.series("fabric/replicate_dedup").total <= n - 1
+
+
 def test_replicate_many_batches_latency(tmp_path):
     fabric = mk_fabric(tmp_path)
     fed = FederatedStore(fabric)
@@ -272,6 +309,21 @@ def test_planner_glob_expansion(tmp_path):
         ["models/ffn/w0", "models/ffn/w1", "k"]
     missing, _ = planner.bytes_missing(planner.expand(["models/ffn/*"]), "s0")
     assert missing == 200
+
+
+def test_planner_never_places_on_zero_capacity_site(tmp_path):
+    """A site whose nodes are ALL offline (but which is not formally
+    down) must not attract even device-less steps: its cluster would
+    drain any pod instantly."""
+    fabric = mk_fabric(tmp_path, devs=(2, 1))
+    fed = FederatedStore(fabric)
+    fed.put("d/x", b"z" * 1000, "s1")            # the data homes at s1
+    for d in list(fabric.sites["s1"].cluster.devices):
+        fabric.sites["s1"].cluster.fail_node(d)  # s1: up, 0 online devices
+    planner = PlacementPlanner(fed)
+    assert all(s.name != "s1" for s in planner.candidates(0))
+    p = planner.place(["d/x"])                   # pays the link instead
+    assert p.site == "s0" and p.mode == "pre-stage"
 
 
 def test_planner_skips_dead_sites_and_records_migration(tmp_path):

@@ -1,0 +1,74 @@
+"""Registry/Series thread-safety and listener streaming.
+
+The regression here: ``Series.points`` used to be appended from pod
+threads while ``summary()``/``scrape()`` iterated under only the
+registry's dict lock — count, mean and total could be computed from
+three different instants of the same series.  Now every read derives
+from one per-series locked snapshot."""
+import threading
+
+from repro.core.metrics import Registry, Series
+
+
+def test_series_summary_consistent_under_concurrent_records():
+    """8 writer threads recording value=1.0 while the main thread
+    summarizes: within any single summary draw, total == count and
+    mean == 1.0 exactly — only possible if stats come from ONE
+    snapshot."""
+    reg = Registry()
+    n_writers, per_writer = 8, 2000
+    start = threading.Barrier(n_writers + 1, timeout=30)
+
+    def writer(w):
+        start.wait()
+        for i in range(per_writer):
+            reg.inc(f"shared/{w % 2}")          # contended series
+            reg.gauge("all", 1.0)
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(n_writers)]
+    for t in threads:
+        t.start()
+    start.wait()
+    draws = 0
+    while any(t.is_alive() for t in threads):
+        for name, st in reg.summary().items():
+            assert st["total"] == st["count"], (name, st)
+            if st["count"]:
+                assert st["mean"] == 1.0, (name, st)
+                assert st["max"] == st["last"] == 1.0, (name, st)
+        reg.scrape()
+        reg.to_csv()
+        draws += 1
+    for t in threads:
+        t.join(timeout=30)
+    assert draws > 0
+    s = reg.summary()
+    assert s["all"]["count"] == n_writers * per_writer
+    assert s["shared/0"]["count"] + s["shared/1"]["count"] == \
+        n_writers * per_writer
+
+
+def test_series_snapshot_is_isolated():
+    s = Series()
+    s.record(1.0)
+    snap = s.snapshot()
+    s.record(2.0)
+    assert len(snap) == 1 and len(s.snapshot()) == 2
+    assert s.last == 2.0 and s.total == 3.0 and s.mean == 1.5
+    st = s.stats()
+    assert st["count"] == 2 and st["p50"] in (1.0, 2.0)
+
+
+def test_registry_listener_gets_every_record_and_survives_errors():
+    reg = Registry()
+    got = []
+    reg.add_listener(lambda n, v, ts: got.append((n, v)))
+    reg.add_listener(lambda n, v, ts: 1 / 0)     # broken observer
+    reg.inc("a")
+    reg.gauge("b", 2.5)
+    with reg.timer("t"):
+        pass
+    assert got[0] == ("a", 1.0) and got[1] == ("b", 2.5)
+    assert got[2][0] == "t" and got[2][1] >= 0.0
+    assert reg.series("a").total == 1.0          # broken listener harmless

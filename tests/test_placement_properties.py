@@ -1,0 +1,123 @@
+"""Hypothesis property tests: PlacementPlanner invariants over generated
+federation topologies and replica layouts.
+
+The two §IV invariants every placement must keep, whatever the topology:
+  * a step never lands on a dead or zero-capacity site (and when no site
+    can host it, place() refuses loudly instead of picking a corpse);
+  * the bytes the fabric actually meters for pre-staging equal the
+    chosen site's ``bytes_missing`` — the cost model and the data plane
+    agree, so Table-I numbers can be trusted.
+"""
+import shutil
+import tempfile
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency "
+                                         "(requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.fabric import Fabric, FederatedStore, PlacementPlanner
+
+NAMES = ["s0", "s1", "s2", "s3"]
+BW = [0.1, 1.0, 10.0]
+
+
+@st.composite
+def scenarios(draw):
+    n = draw(st.integers(min_value=2, max_value=4))
+    names = NAMES[:n]
+    devs = {s: draw(st.integers(min_value=0, max_value=3)) for s in names}
+    up = {s: draw(st.booleans()) for s in names}
+    links = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            if draw(st.booleans()):
+                links.append((names[i], names[j],
+                              draw(st.sampled_from(BW))))
+    keys = []
+    for k in range(draw(st.integers(min_value=0, max_value=5))):
+        keys.append((f"d/k{k}",
+                     draw(st.sampled_from(names)),          # home
+                     draw(st.integers(min_value=1, max_value=2048)),
+                     draw(st.lists(st.sampled_from(names),  # extra replicas
+                                   max_size=n, unique=True))))
+    devices = draw(st.integers(min_value=0, max_value=3))
+    return names, devs, up, links, keys, devices
+
+
+def build(names, devs, up, links, keys, root):
+    fabric = Fabric()
+    for s in names:
+        fabric.add_site(s, devices=list(range(devs[s])),
+                        store_root=f"{root}/{s}")
+    for a, b, gbps in links:
+        fabric.connect(a, b, gbps=gbps, latency_ms=1.0)
+    fed = FederatedStore(fabric)
+    for key, home, size, reps in keys:
+        fed.put(key, b"x" * size, home)
+        for r in reps:
+            if r == home:
+                continue
+            try:
+                fed.replicate(key, r)
+            except (FileNotFoundError, ValueError):
+                pass                    # no route — partial topologies ok
+    for s in names:                     # sites die AFTER the data landed
+        if not up[s]:
+            fabric.fail_site(s)
+    return fabric, fed
+
+
+@settings(max_examples=60, deadline=None)
+@given(scenario=scenarios())
+def test_placement_never_lands_on_dead_or_empty_site(scenario):
+    names, devs, up, links, keys, devices = scenario
+    root = tempfile.mkdtemp(prefix="placement-prop-")
+    try:
+        fabric, fed = build(names, devs, up, links, keys, root)
+        planner = PlacementPlanner(fed)
+        inputs = [k for k, *_ in keys]
+        hosts = [s for s in names
+                 if up[s] and devs[s] >= max(devices, 1)]
+        if hosts:
+            p = planner.place(inputs, devices=devices)
+            site = fabric.sites[p.site]
+            assert site.up, f"placed on dead site {p.site}"
+            assert site.capacity >= max(devices, 1), \
+                f"placed on empty site {p.site}"
+        else:
+            with pytest.raises(RuntimeError, match="no live site"):
+                planner.place(inputs, devices=devices)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+@settings(max_examples=60, deadline=None)
+@given(scenario=scenarios())
+def test_metered_bytes_equal_bytes_missing(scenario):
+    """fabric/bytes_moved's delta for a pre-stage == the placement's
+    bytes_to_move == bytes_missing at the chosen site, for every
+    generated topology / replica layout."""
+    names, devs, up, links, keys, devices = scenario
+    root = tempfile.mkdtemp(prefix="placement-prop-")
+    try:
+        fabric, fed = build(names, devs, up, links, keys, root)
+        planner = PlacementPlanner(fed)
+        inputs = [k for k, *_ in keys]
+        if not any(up[s] and devs[s] >= max(devices, 1) for s in names):
+            return
+        p = planner.place(inputs, devices=devices)
+        missing, _ = planner.bytes_missing(planner.expand(inputs), p.site)
+        assert p.bytes_to_move == missing
+        before = fabric.metrics.series("fabric/bytes_moved").total
+        moved, _ = planner.prestage(inputs, p.site)
+        delta = fabric.metrics.series("fabric/bytes_moved").total - before
+        assert delta == moved == missing, \
+            (f"meter {delta} != staged {moved} != missing {missing} "
+             f"at {p.site}")
+        # and afterwards the step is data-local: nothing left to move
+        still, _ = planner.bytes_missing(planner.expand(inputs), p.site)
+        assert still == 0
+    finally:
+        shutil.rmtree(root, ignore_errors=True)

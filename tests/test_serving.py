@@ -330,6 +330,47 @@ def test_continuous_serve_end_to_end():
     assert s["serve/request_latency_s"]["count"] == 5
 
 
+def test_engine_preemption_stops_cleanly_and_requeues():
+    """A preempted serving pod (repro.vcluster) exits between fused
+    steps without acking in-flight work: those leases expire back to the
+    queue, and a re-placed engine serves every request to completion."""
+    from repro.configs import registry
+    from repro.core.queue import WorkQueue
+    from repro.launch.mesh import single_device_mesh
+    from repro.serving import ServingEngine
+
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    par = registry.get_parallel("phi4-mini-3.8b")
+    mesh = single_device_mesh()
+    reqs = [{"id": i, "prompt": [1 + i] * 4, "max_new_tokens": 3}
+            for i in range(4)]
+    queue = WorkQueue(reqs, lease_timeout=0.05)
+
+    engine = ServingEngine(cfg, par, mesh, num_slots=2, prompt_len=4,
+                           max_new_tokens=3)
+    calls = {"n": 0}
+
+    def stop_after_two():
+        calls["n"] += 1
+        return calls["n"] > 2           # a couple of steps, then evicted
+
+    results, metrics = engine.run(queue, should_stop=stop_after_two)
+    assert metrics.series("serve/preempted").points
+    assert len(results) < 4             # interrupted mid-stream
+    assert not queue.drained()
+    # "re-placed" engine (fresh slots/caches) picks up the expired leases
+    import time as _t
+    _t.sleep(0.06)                      # let the in-flight leases expire
+    engine2 = ServingEngine(cfg, par, mesh, num_slots=2, prompt_len=4,
+                            max_new_tokens=3)
+    results2, _ = engine2.run(queue)
+    done = dict(results)
+    done.update(results2)
+    assert sorted(done) == [0, 1, 2, 3]
+    assert all(len(v) == 3 for v in done.values())
+    assert queue.drained()
+
+
 def test_continuous_serve_audio_family():
     """Enc-dec (whisper) serving: the decoder-position table is the self
     cache, so the engine must budget prompt + generation inside

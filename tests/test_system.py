@@ -241,6 +241,35 @@ def test_drained_pod_late_completion_stays_failed(cluster):
     assert not cluster.leased
 
 
+def test_wait_deadline_enforced_across_many_hung_pods():
+    """Regression: the inner per-pod join loop used to check the deadline
+    only once per outer pass — with many pods one pass costs
+    len(pods) * reconcile_every seconds, so a hung pod overshot a short
+    timeout by orders of magnitude.  The deadline now binds across the
+    joins."""
+    cluster = Cluster(devices=list(range(32)))
+    cluster.create_namespace("default")
+    release = threading.Event()
+
+    def hung(ctx):                      # cooperative but never released
+        release.wait(timeout=30)
+        return "ok"
+
+    job = cluster.submit("default", JobSpec("hung", hung, replicas=20,
+                                            devices_per_pod=1))
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            # old behaviour: one outer pass = 20 * 0.2s = 4s minimum
+            cluster.wait(job, reconcile_every=0.2, timeout=0.5)
+        elapsed = time.monotonic() - t0
+        assert elapsed < 2.0, f"wait overshot its deadline: {elapsed:.2f}s"
+    finally:
+        release.set()                   # let the pod threads exit
+        for pod in job.pods:
+            pod.thread.join(timeout=10)
+
+
 # -------------------------------------------------------------- checkpoint
 
 def test_checkpoint_roundtrip_and_gc(store):
