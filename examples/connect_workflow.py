@@ -1,20 +1,23 @@
 """The paper's CONNECT case study (§III) end to end: download -> FFN train
 -> distributed flood-fill inference -> CONNECT object analysis, as a
-measured, resumable 4-step workflow.  Prints the paper's Table I for this
-run.
+measured, resumable 4-step workflow declared through the unified API.
+Prints the paper's Table I for this run.
 
     PYTHONPATH=src python examples/connect_workflow.py [--full]
 
---full uses the paper-shaped grid (361x576); default is a reduced grid so
-the example finishes in a couple of minutes on one CPU.  Run it twice with
-the same --root to see workflow-level resume (all steps skip).
+The DAG itself is attached declaratively: the ``WorkflowRun`` names the
+``repro.apps.connect.pipeline:add_connect_steps`` entrypoint and sizes
+the run through plain-JSON ``params`` — the whole example could be a
+manifest file.  --full uses the paper-shaped grid (361x576); default is
+a reduced grid so it finishes in a couple of minutes on one CPU.  Run it
+twice with the same --root to see workflow-level resume (all steps skip).
 """
 import argparse
 import tempfile
 
-from repro.apps.connect.pipeline import (ConnectConfig, run_connect_workflow)
-from repro.data.volumes import VolumeSpec
-from repro.models.ffn3d import FFNConfig
+from repro.api import Session, WorkflowRun
+from repro.core.orchestrator import Cluster
+from repro.data.objectstore import ObjectStore
 
 
 def main():
@@ -25,22 +28,26 @@ def main():
     root = args.root or tempfile.mkdtemp(prefix="connect-")
 
     if args.full:
-        cc = ConnectConfig(n_chunks=4, download_workers=4,
-                           inference_workers=4,
-                           vol=VolumeSpec(lat=361, lon=576, frames=24),
-                           train_steps=120)
+        params = dict(n_chunks=4, download_workers=4, inference_workers=4,
+                      vol=dict(lat=361, lon=576, frames=24),
+                      train_steps=120)
     else:
-        cc = ConnectConfig(
+        params = dict(
             n_chunks=2, download_workers=2, inference_workers=2,
-            vol=VolumeSpec(lat=48, lon=72, frames=16, events=2),
-            ffn=FFNConfig(depth=3, width=12, fov=(8, 16, 16), flood_iters=3),
+            vol=dict(lat=48, lon=72, frames=16, events=2),
+            ffn=dict(depth=3, width=12, fov=(8, 16, 16), flood_iters=3),
             train_steps=30, train_batch=4)
 
-    wf, results = run_connect_workflow(root, cc)
+    session = Session(cluster=Cluster(), store=ObjectStore(root))
+    out = session.apply(WorkflowRun(
+        name="connect", namespace="atmos-science",
+        entrypoint="repro.apps.connect.pipeline:add_connect_steps",
+        params=params)).wait(timeout=3600)
+    results = out["results"]
     print(f"\nworkflow state in {root}")
-    for step, out in results.items():
-        print(f"  {step}: {out}")
-    print("\n" + wf.table_one())
+    for step, res in results.items():
+        print(f"  {step}: {res}")
+    print("\n" + out["table"])
     tr = results["train"]
     assert tr["last_loss"] < tr["first_loss"], "FFN training must improve"
     assert results["analyze"]["objects"] >= 1, "CONNECT should find objects"

@@ -1,11 +1,10 @@
 """Self-healing elastic training demo (paper §V: "nodes can join and leave
 the cluster at any time").
 
-Unlike the seed version of this example — which drove every phase by hand
-(fail nodes, build mesh, restore, run a segment, repeat) — ALL the control
-here lives in ``repro.elastic.ElasticTrainer``.  The script only injects a
-churn schedule against the cluster, exactly like an unplugged appliance
-would:
+ALL the control lives in the platform: a ``TrainJob`` declared through
+``repro.api.Session`` runs as a supervised elastic workload, and this
+script only injects a churn schedule against the cluster, exactly like
+an unplugged appliance would:
 
   1. training starts on a (4 data, 2 model) mesh over 8 simulated nodes;
   2. two nodes FAIL mid-run: the cluster drains their pods, the trainer
@@ -35,10 +34,8 @@ import time       # noqa: E402
 
 import jax        # noqa: E402
 
-from repro.configs import registry                       # noqa: E402
-from repro.configs.base import OptimizerConfig           # noqa: E402
+from repro.api import Session, TrainJob                  # noqa: E402
 from repro.core.orchestrator import Cluster              # noqa: E402
-from repro.elastic import ElasticTrainer, ElasticTrainSpec  # noqa: E402
 
 
 def main():
@@ -51,29 +48,29 @@ def main():
     fail_after = steps // 4          # churn points, in completed steps
     rejoin_after = steps // 2
 
-    arch = "phi4-mini-3.8b"
-    cfg = registry.get_smoke(arch)
-    par = registry.get_parallel(arch)
-    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=2, decay_steps=200)
-
     cluster = Cluster(devices=jax.devices())
     assert len(cluster.devices) == 8, "expected 8 forced host devices"
-    spec = ElasticTrainSpec(
-        cfg, par, ocfg, steps=steps, seq_len=64, global_batch=16,
-        base_shape=(4, 2), ckpt_every=3 if args.fast else 5,
-        log_every=5, rejoin_timeout_s=120.0)
-    trainer = ElasticTrainer(cluster, spec)
+    session = Session(cluster=cluster)
+    handle = session.apply(TrainJob(
+        name="elastic-demo", steps=steps, seq_len=64, global_batch=16,
+        base_shape=(4, 2), max_data=None,
+        ckpt_every=3 if args.fast else 5, log_every=5,
+        rejoin_timeout_s=120.0,
+        optimizer={"lr": 1e-3, "warmup_steps": 2, "decay_steps": 200}))
 
     victims = jax.devices()[6:]
 
+    def progress() -> int:
+        return handle.status().observed.get("step", -1)
+
     def inject_churn():
         """The outside world: two nodes die, then come back."""
-        while trainer.progress < fail_after:
+        while progress() < fail_after:
             time.sleep(0.02)
         print(f">>> churn: unplugging {len(victims)} nodes")
         for d in victims:
             cluster.fail_node(d)
-        while trainer.progress < rejoin_after:
+        while progress() < rejoin_after:
             time.sleep(0.02)
         print(f">>> churn: {len(victims)} nodes rejoin")
         for d in victims:
@@ -81,7 +78,7 @@ def main():
 
     churn = threading.Thread(target=inject_churn, daemon=True)
     churn.start()
-    out = trainer.run()
+    out = handle.wait(timeout=3600)
     churn.join(timeout=10)
     report = out["report"]
 
@@ -97,6 +94,7 @@ def main():
     accums = {s.mesh_shape: s.accum_steps for s in report.segments}
     assert accums[(2, 2)] == 2 * accums[(4, 2)], accums
     assert out["losses"][-1] < out["losses"][0], "loss did not improve"
+    assert handle.state.value == "Succeeded", handle.state
 
     print("CHURN_REPORT " + json.dumps(report.to_json()))
     print(f"OK: self-healed across fail({fail_after})/rejoin({rejoin_after}) "

@@ -4,8 +4,9 @@ CHASE-CI is a *network* of GPU appliances on the Pacific Research
 Platform, not one cluster: data lives where it was ingested, links have
 real bandwidth, and virtual-cluster management decides whether a step's
 pods go to the data or the data comes to the pods.  This example runs
-the paper's CONNECT case study on `repro.fabric` with three unequal
-sites and makes that trade-off measurable:
+the paper's CONNECT case study through the unified API — a
+``WorkflowRun`` applied to a ``Session(fabric=..., planner=...)`` — with
+three unequal sites and makes that trade-off measurable:
 
   1. locality-aware placement: each step lands on the site that
      minimizes  bytes_to_move / link_bw + queue_depth  — the per-step
@@ -26,7 +27,8 @@ import argparse
 import json
 import time
 
-from repro.apps.connect.pipeline import ConnectConfig, build_workflow
+from repro.api import Session, WorkflowRun
+from repro.apps.connect.pipeline import ConnectConfig, add_connect_steps
 from repro.data.volumes import VolumeSpec
 from repro.fabric import Fabric, FederatedStore, PlacementPlanner
 from repro.models.ffn3d import FFNConfig
@@ -49,25 +51,33 @@ def run_once(cc: ConnectConfig, *, data_blind: bool, kill_site: str = "",
              time_scale: float = 0.0):
     fabric = build_fabric(time_scale)
     planner = PlacementPlanner(FederatedStore(fabric), data_blind=data_blind)
-    wf = build_workflow(cc=cc, planner=planner)
+    session = Session(fabric=fabric, planner=planner)
+
+    def run(only=""):
+        spec = WorkflowRun(name="connect", namespace="atmos-science",
+                           only=only or None,
+                           define=lambda wf: add_connect_steps(wf, cc))
+        return session.apply(spec).wait(timeout=3600)
+
     t0 = time.perf_counter()
     if kill_site:
-        wf.run(only="download")        # chunks scattered + 1 replica each
+        run(only="download")           # chunks scattered + 1 replica each
         print(f">>> site {kill_site!r} unplugged (whole appliance)")
         fabric.fail_site(kill_site)
-        results = wf.run()             # resume: download skipped, rest placed
+        out = run()                    # resume: download skipped, rest placed
     else:
-        results = wf.run()
+        out = run()
     makespan = time.perf_counter() - t0
+    reports = out["reports"]
     stats = {
         "planner": "blind" if data_blind else "locality",
         "bytes_moved": int(fabric.metrics.series("fabric/bytes_moved").total),
         "transfer_s": round(fabric.metrics.series("fabric/transfer_s").total, 4),
         "makespan_s": round(makespan, 3),
-        "sites": {r.step: r.site for r in wf.reports},
-        "migrated": [r.step for r in wf.reports if "migrated" in r.extra],
+        "sites": {r.step: r.site for r in reports},
+        "migrated": [r.step for r in reports if "migrated" in r.extra],
     }
-    return wf, results, stats
+    return fabric, out, stats
 
 
 def main():
@@ -86,10 +96,11 @@ def main():
         train_steps=10 if args.fast else 30)
 
     # --- 1+2: locality-aware vs data-blind on identical inputs -----------
-    wf_loc, res_loc, loc = run_once(cc, data_blind=False,
-                                    time_scale=args.time_scale)
-    wf_bld, res_bld, bld = run_once(cc, data_blind=True,
-                                    time_scale=args.time_scale)
+    _, out_loc, loc = run_once(cc, data_blind=False,
+                               time_scale=args.time_scale)
+    _, out_bld, bld = run_once(cc, data_blind=True,
+                               time_scale=args.time_scale)
+    res_loc, res_bld = out_loc["results"], out_bld["results"]
     assert res_bld["analyze"]["objects"] == res_loc["analyze"]["objects"], \
         "placement must not change results"
     assert loc["bytes_moved"] < bld["bytes_moved"], \
@@ -98,21 +109,22 @@ def main():
 
     # --- 3: whole-site failure after download ----------------------------
     # chunk 0 (the training input) homes at the hub; kill the hub
-    wf_kill, res_kill, kill = run_once(cc, data_blind=False,
-                                       kill_site="sdsc",
-                                       time_scale=args.time_scale)
+    fabric_kill, out_kill, kill = run_once(cc, data_blind=False,
+                                           kill_site="sdsc",
+                                           time_scale=args.time_scale)
+    res_kill = out_kill["results"]
     assert res_kill["analyze"]["objects"] >= 1, "workflow must complete"
-    post_kill = [r for r in wf_kill.reports if r.step != "download"]
+    post_kill = [r for r in out_kill["reports"] if r.step != "download"]
     assert post_kill and all(r.site != "sdsc" for r in post_kill), \
         f"steps ran on a dead site: {[(r.step, r.site) for r in post_kill]}"
     assert kill["migrated"], "site kill must be recorded as a migration"
-    skipped = wf_kill.metrics.series("workflow/connect/download/skipped")
+    skipped = fabric_kill.metrics.series("workflow/connect/download/skipped")
     assert skipped.points, "download must resume, not rerun, after the kill"
 
     print("\n--- locality-aware (Table I with Site / bytes_moved rows) ---")
-    print(wf_loc.table_one())
+    print(out_loc["table"])
     print("\n--- after killing 'sdsc' mid-workflow ---")
-    print(wf_kill.table_one())
+    print(out_kill["table"])
     print("\nFABRIC_REPORT " + json.dumps(
         {"locality": loc, "blind": bld, "site_kill": kill}))
     saved = bld["bytes_moved"] - loc["bytes_moved"]

@@ -1,9 +1,9 @@
 """Multi-tenant virtual clusters on one shared fabric (paper §I, §IV).
 
-CHASE-CI is a *shared appliance*: ~30 institutions on one federation,
-which is exactly what the repo could not do until now — every workload
-owned the whole fabric.  This example runs the multi-tenant stack end to
-end and asserts the paper-shaped contracts:
+CHASE-CI is a *shared appliance*: ~30 institutions on one federation.
+This example runs the multi-tenant stack end to end — every workload
+declared through the unified API (`Session(tenant=...)`) — and asserts
+the paper-shaped contracts:
 
   1. **fair share under contention** — two equal-share tenants submit
      identical job streams to a saturated 2-site fabric.  Under the
@@ -15,9 +15,9 @@ end and asserts the paper-shaped contracts:
      its checkpoint when the grant returns, while an inference tenant
      keeps serving on its own slice of the SAME fabric (train and serve
      tenants co-exist);
-  3. **near-real-time monitor** — every scheduling / churn / transfer
-     event reaches a live subscriber with bounded lag, rendered by the
-     repro.launch.monitor dashboard.
+  3. **near-real-time monitor** — every scheduling / churn / transfer /
+     workload-lifecycle event reaches a live subscriber with bounded
+     lag, rendered by the repro.launch.monitor dashboard.
 
     PYTHONPATH=src python examples/multitenant_fabric.py [--fast]
 
@@ -31,10 +31,8 @@ import time
 
 import jax
 
-from repro.configs import registry
-from repro.configs.base import OptimizerConfig
+from repro.api import BatchJob, ServeJob, Session, TrainJob
 from repro.core.orchestrator import Cluster, JobSpec
-from repro.elastic.trainer import ElasticTrainSpec
 from repro.fabric import Fabric, FederatedStore
 from repro.launch.monitor import render_frame
 from repro.vcluster import FairShareScheduler, TenantSpec
@@ -84,7 +82,8 @@ def run_contention(policy: str, *, n_jobs: int, job_s: float) -> dict:
 
 def run_preemption_scenario(fast: bool) -> dict:
     """Train / serve / burst tenants share one fabric; the burst
-    checkpoint-evicts the trainer, which resumes and finishes."""
+    checkpoint-evicts the trainer, which resumes and finishes.  Each
+    tenant's workloads go through its own Session on the same API."""
     dev = jax.devices()[0]
     fabric = Fabric()
     # one training appliance, one inference appliance, one data hub
@@ -120,6 +119,10 @@ def run_preemption_scenario(fast: bool) -> dict:
     serve_t = sched.create_tenant(TenantSpec("serve", priority=5))
     burst_t = sched.create_tenant(TenantSpec("burst", priority=10,
                                              preemptible=False))
+    # one Session per tenant: same verbs, tenant-scoped placement
+    train_s = Session(tenant=train_t)
+    serve_s = Session(tenant=serve_t)
+    burst_s = Session(tenant=burst_t)
 
     mon = threading.Thread(target=monitor, daemon=True)
 
@@ -128,58 +131,50 @@ def run_preemption_scenario(fast: bool) -> dict:
             "hub")
 
     steps = 10 if fast else 16
-    arch = "phi4-mini-3.8b"
-    tspec = ElasticTrainSpec(
-        registry.get_smoke(arch), registry.get_parallel(arch),
-        OptimizerConfig(warmup_steps=2, decay_steps=100),
-        steps=steps, seq_len=32, global_batch=4, base_shape=(1, 1),
-        max_data=1, ckpt_every=2, log_every=1, rejoin_timeout_s=120.0,
-        verbose=False)
+    train_job = TrainJob(
+        name="elastic-train", steps=steps, seq_len=32, global_batch=4,
+        base_shape=(1, 1), max_data=1, ckpt_every=2, log_every=1,
+        rejoin_timeout_s=120.0, verbose=False, site="gpu", devices=1,
+        optimizer={"warmup_steps": 2, "decay_steps": 100})
 
     n_req = 4 if fast else 8
     gen = 4 if fast else 8
-
-    def build_engine():
-        from repro.launch.mesh import single_device_mesh
-        from repro.serving import ServingEngine
-        return ServingEngine(registry.get_smoke(arch),
-                             registry.get_parallel(arch),
-                             single_device_mesh(), num_slots=2,
-                             prompt_len=8, max_new_tokens=gen)
-
-    requests = [{"id": i, "prompt": [1 + i] * 8, "max_new_tokens": gen}
-                for i in range(n_req)]
+    serve_job = ServeJob(
+        name="serve-edge", slots=2, prompt_len=8, max_new_tokens=gen,
+        site="edge",
+        requests=[{"id": i, "prompt": [1 + i] * 8, "max_new_tokens": gen}
+                  for i in range(n_req)])
 
     fired = {"burst": False}
 
     def fire_burst():
         while fabric.metrics.series("elastic/step").last < 3:
             time.sleep(0.005)
-        j = burst_t.submit(JobSpec(
-            "burst", lambda ctx: time.sleep(0.3) or "hi",
-            devices_per_pod=1), site="gpu")
-        j.wait(120)
+        burst_s.apply(BatchJob(name="burst", devices_per_pod=1,
+                               site="gpu"),
+                      fn=lambda ctx: time.sleep(0.3) or "hi").wait(120)
         fired["burst"] = True
 
     with sched:
         mon.start()
         # the trainer's inputs are staged from the hub, billed to it
         train_t.store("gpu").get("datasets/corpus.bin")
-        serve_job, queue = serve_t.serve(build_engine, requests, site="edge",
-                                         default_max_new=gen)
+        serve_handle = serve_s.apply(serve_job)
         burster = threading.Thread(target=fire_burst, daemon=True)
         burster.start()
-        out = train_t.run_elastic(tspec, site="gpu", devices=1)
+        out = train_s.apply(train_job).wait(600)
         burster.join(timeout=120)
-        serve_job.wait(300)
+        serve_out = serve_handle.wait(300)
         # a final pass so "done" events reach the stream before we stop
         time.sleep(3 * sched.reconcile_s)
     stop_mon.set()
     mon.join(timeout=10)
 
     rep = out["report"]
-    results = serve_job.results()[0]
-    frame = render_frame(sched, [])
+    results = serve_out["results"]
+    frame = render_frame(sched, [],
+                         workloads=train_s.workloads + serve_s.workloads +
+                         burst_s.workloads)
     print(frame)
     return {
         "steps": steps,
@@ -187,7 +182,7 @@ def run_preemption_scenario(fast: bool) -> dict:
         "preemptions": int(
             fabric.metrics.series("elastic/preemptions").total),
         "steps_lost": rep.steps_lost,
-        "ckpt_every": tspec.ckpt_every,
+        "ckpt_every": train_job.ckpt_every,
         "completed": rep.segments[-1].end == steps - 1,
         "losses_complete": sorted(out["loss_by_step"]) == list(range(steps)),
         "burst_done": fired["burst"],
@@ -235,7 +230,8 @@ def main():
     assert mon["received"] == mon["published"] and mon["dropped"] == 0, mon
     assert mon["max_lag_s"] < MONITOR_INTERVAL_S, \
         f"monitor lag exceeded one reconcile interval: {mon}"
-    assert {"sched", "pod", "transfer", "metric"} <= set(mon["kinds"]), mon
+    assert {"sched", "pod", "transfer", "metric", "workload"} <= \
+        set(mon["kinds"]), mon
 
     print("\nVCLUSTER_REPORT " + json.dumps(
         {"fair": fair, "fifo": fifo, "preemption": prem}))

@@ -1,29 +1,46 @@
-"""Quickstart: train a tiny LM for a few steps, then serve it.
+"""Quickstart: declare workloads, let the platform run them.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Uses the public API end to end: config registry -> train driver (sharded
-step, checkpointing substrate underneath) -> serving driver (prefill +
-decode with a KV cache).  Runs in ~a minute on one CPU.
+The paper's platform is manifest-driven: you declare WHAT should run and
+the control plane schedules, measures and heals it.  This example does
+exactly that end to end — a ``TrainJob`` and a ``ServeJob`` declared as
+manifests (the kubectl-JSON analogue), applied through one ``Session``
+on a one-host cluster, observed through the same Handle verbs every
+workload kind shares.  Runs in ~a minute on one CPU.
 """
-from repro.launch.serve import serve
-from repro.launch.train import train
+from repro.api import ServeJob, Session, TrainJob, from_manifest
+from repro.core.orchestrator import Cluster
 
 
 def main():
-    print("=== train (reduced phi4-family config) ===")
-    out = train("phi4-mini-3.8b", steps=20, seq=64, batch=4, smoke=True,
-                log_every=5)
+    session = Session(cluster=Cluster())
+
+    print("=== train (reduced phi4-family config, declared as a manifest) ===")
+    train = TrainJob(name="quickstart-train", steps=20, seq_len=64,
+                     global_batch=4, log_every=5)
+    manifest = train.to_manifest()          # dict/JSON — the declaration
+    assert from_manifest(manifest) == train, "manifest round-trip is lossless"
+    out = session.apply(manifest).wait()
     losses = out["losses"]
     print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
     assert losses[-1] < losses[0], "training should reduce loss"
 
     print("\n=== serve (batched requests through the work queue) ===")
-    results, metrics = serve("phi4-mini-3.8b", smoke=True, n_requests=6,
-                             prompt_len=16, gen=8, batch=2)
+    handle = session.apply(ServeJob(name="quickstart-serve", n_requests=6,
+                                    prompt_len=16, max_new_tokens=8,
+                                    slots=2))
+    out = handle.wait()
+    results, metrics = out["results"], out["metrics"]
     print(f"served {len(results)} requests; "
           f"sample generation: {results[0][:8]}")
     print(metrics.to_csv())
+
+    print("\n=== one lifecycle stream for both workloads ===")
+    for status in session.status():
+        print("  " + status.brief())
+    states = [s.state.value for s in session.status()]
+    assert states == ["Succeeded", "Succeeded"], states
 
 
 if __name__ == "__main__":

@@ -2,17 +2,16 @@
 
     PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-9b]
 
-Requests land in the fault-tolerant WorkQueue (the paper's Redis job
-queue); a fixed pool of decode slots serves them with per-request prefill
-and one fused per-slot decode step per iteration.  Requests ask for
-different stop lengths, so slots evict early and refill from the queue
-mid-flight — watch ``serve/slot_occupancy`` stay high while short and
-long requests mix.
+A ``ServeJob`` declares the stream (requests with different stop
+lengths, so slots evict early and refill from the queue mid-flight) and
+the Session routes it to the continuous batcher — watch
+``serve/slot_occupancy`` stay high while short and long requests mix.
 """
 import argparse
 
-from repro.launch.serve import serve, serving_report
+from repro.api import ServeJob, Session
 from repro.core.metrics import table_one
+from repro.core.orchestrator import Cluster
 
 
 def main():
@@ -20,15 +19,17 @@ def main():
     ap.add_argument("--arch", default="phi4-mini-3.8b")
     ap.add_argument("--requests", type=int, default=8)
     args = ap.parse_args()
-    results, metrics = serve(args.arch, smoke=True,
-                             n_requests=args.requests, prompt_len=24,
-                             gen=12, batch=4, gen_lens=[12, 3, 6, 3])
+    job = ServeJob(name=f"serve-{args.arch}", arch=args.arch,
+                   n_requests=args.requests, prompt_len=24,
+                   max_new_tokens=12, slots=4, gen_lens=(12, 3, 6, 3))
+    out = Session(cluster=Cluster()).apply(job).wait()
+    results = out["results"]
     print(f"served {len(results)} requests on {args.arch} (reduced config)")
     for rid in sorted(results)[:3]:
         print(f"  request {rid}: generated {results[rid]}")
-    print(metrics.to_csv())
+    print(out["metrics"].to_csv())
     print()
-    print(table_one([serving_report(metrics)]))
+    print(table_one([out["report"]]))
     assert len(results) == args.requests
 
 

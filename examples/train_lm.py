@@ -5,6 +5,11 @@ steps on the synthetic token pipeline, with checkpoints and auto-resume.
     PYTHONPATH=src python examples/train_lm.py --hundred-m    # ~100M config
     PYTHONPATH=src python examples/train_lm.py --resume-demo  # crash+resume
 
+The model is declared INSIDE the ``TrainJob`` manifest (``config`` holds
+the ModelConfig kwargs), so the whole run — model, schedule, checkpoint
+cadence, even the injected crash — is one declarative resource applied
+through the unified Session API.
+
 The --hundred-m config is the deliverable's "train ~100M model for a few
 hundred steps" driver; on one CPU core it is slow (use a real accelerator),
 so the default is a same-shape smaller model that finishes in minutes.
@@ -12,19 +17,19 @@ so the default is a same-shape smaller model that finishes in minutes.
 import argparse
 import tempfile
 
-from repro.configs.base import ModelConfig
-from repro.launch.train import train
+from repro.api import Session, TrainJob
+from repro.core.orchestrator import Cluster
 
 
-def lm_config(hundred_m: bool) -> ModelConfig:
+def lm_config(hundred_m: bool) -> dict:
     if hundred_m:
         # ~110M params: 12L, d=768, ff=2048, vocab=32768
-        return ModelConfig(name="lm-100m", family="dense", num_layers=12,
-                           d_model=768, num_heads=12, num_kv_heads=4,
-                           d_ff=2048, vocab_size=32_768, head_dim=64)
-    return ModelConfig(name="lm-20m", family="dense", num_layers=6,
-                       d_model=320, num_heads=8, num_kv_heads=4,
-                       d_ff=896, vocab_size=16_384, head_dim=40)
+        return dict(name="lm-100m", family="dense", num_layers=12,
+                    d_model=768, num_heads=12, num_kv_heads=4,
+                    d_ff=2048, vocab_size=32_768, head_dim=64)
+    return dict(name="lm-20m", family="dense", num_layers=6,
+                d_model=320, num_heads=8, num_kv_heads=4,
+                d_ff=896, vocab_size=16_384, head_dim=40)
 
 
 def main():
@@ -34,19 +39,20 @@ def main():
     ap.add_argument("--resume-demo", action="store_true")
     args = ap.parse_args()
 
-    cfg = lm_config(args.hundred_m)
+    config = lm_config(args.hundred_m)
     steps = args.steps or (300 if not args.hundred_m else 200)
-    ckpt_dir = tempfile.mkdtemp(prefix="lm-ckpt-")
-    kw = dict(steps=steps, seq=64, batch=4, smoke=False, ckpt_dir=ckpt_dir,
-              ckpt_every=25, cfg_override=cfg)
-
+    job = TrainJob(name=config["name"], steps=steps, seq_len=64,
+                   global_batch=4, smoke=False, config=config,
+                   ckpt_dir=tempfile.mkdtemp(prefix="lm-ckpt-"),
+                   ckpt_every=25,
+                   # one injected crash mid-run: the elastic supervisor
+                   # restores from the latest checkpoint and finishes
+                   # WITHIN this same apply
+                   fail_at=min(45, steps // 2) if args.resume_demo else -1)
     if args.resume_demo:
-        # one injected crash mid-run: the elastic supervisor restores from
-        # the latest checkpoint and finishes WITHIN this same call
-        kw = dict(kw, fail_at=min(45, steps // 2))
         print("[demo] training with an injected crash — the supervisor "
               "auto-resumes from the latest checkpoint")
-    out = train(cfg.name, **kw)
+    out = Session(cluster=Cluster()).apply(job).wait(timeout=3600)
     losses = out["losses"]
     print(f"final: first-loss {losses[0]:.3f} last-loss {losses[-1]:.3f}")
     assert losses[-1] < losses[0]

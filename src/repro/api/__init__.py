@@ -1,0 +1,23 @@
+"""The unified declarative workload API — one manifest-driven control
+plane for train / serve / batch / workflow across cluster, fabric and
+tenants (see docs/api.md).
+
+    from repro.api import Session, TrainJob
+
+    session = Session(cluster=Cluster())
+    handle = session.apply(TrainJob(name="demo", steps=20))
+    out = handle.wait()
+"""
+from repro.api.resources import (API_VERSION, BatchJob, KINDS, ManifestError,
+                                 ServeJob, TrainJob, WorkflowRun,
+                                 WorkloadSpec, from_json, from_manifest,
+                                 load_manifest, resolve_entrypoint)
+from repro.api.session import (Handle, Session, TERMINAL_STATES,
+                               WorkloadState, WorkloadStatus)
+
+__all__ = [
+    "API_VERSION", "BatchJob", "Handle", "KINDS", "ManifestError",
+    "ServeJob", "Session", "TERMINAL_STATES", "TrainJob", "WorkflowRun",
+    "WorkloadSpec", "WorkloadState", "WorkloadStatus", "from_json",
+    "from_manifest", "load_manifest", "resolve_entrypoint",
+]

@@ -235,15 +235,29 @@ def dataset_keys(cc: ConnectConfig) -> Dict[str, List[str]]:
             "model": ["models/ffn/*"]}
 
 
-def build_workflow(cluster: Optional[Cluster] = None,
-                   store: Optional[ObjectStore] = None,
-                   cc: Optional[ConnectConfig] = None,
-                   metrics: Optional[Registry] = None,
-                   planner=None) -> Workflow:
-    cc = cc or ConnectConfig()
+def connect_config(**kw) -> ConnectConfig:
+    """ConnectConfig from plain (manifest-shaped) kwargs: nested ``vol``
+    / ``ffn`` dicts become their dataclasses."""
+    if isinstance(kw.get("vol"), dict):
+        kw["vol"] = volumes.VolumeSpec(**kw["vol"])
+    if isinstance(kw.get("ffn"), dict):
+        kw["ffn"] = ffn3d.FFNConfig(**kw["ffn"])
+    return ConnectConfig(**kw)
+
+
+def add_connect_steps(wf: Workflow, cc=None, **kw) -> Workflow:
+    """Attach the paper's 4-step CONNECT DAG to an existing workflow.
+
+    This is the ``repro.api.WorkflowRun`` entrypoint
+    (``"repro.apps.connect.pipeline:add_connect_steps"``): ``cc`` may be
+    a ConnectConfig, a manifest-shaped dict, or omitted — leftover
+    kwargs feed ``connect_config`` so a pure-JSON manifest can size the
+    run."""
+    if cc is None:
+        cc = connect_config(**kw)
+    elif isinstance(cc, dict):
+        cc = connect_config(**{**cc, **kw})
     ds = dataset_keys(cc)
-    wf = Workflow("connect", cluster=cluster, store=store, metrics=metrics,
-                  namespace="atmos-science", planner=planner)
     wf.add(Step("download", lambda ctx: step_download(ctx, cc),
                 pods=cc.download_workers,
                 outputs=ds["ivt"] + ds["labels"]))
@@ -255,6 +269,16 @@ def build_workflow(cluster: Optional[Cluster] = None,
     wf.add(Step("analyze", lambda ctx: step_analyze(ctx, cc),
                 deps=["inference"], inputs=ds["masks"]))
     return wf
+
+
+def build_workflow(cluster: Optional[Cluster] = None,
+                   store: Optional[ObjectStore] = None,
+                   cc: Optional[ConnectConfig] = None,
+                   metrics: Optional[Registry] = None,
+                   planner=None) -> Workflow:
+    wf = Workflow("connect", cluster=cluster, store=store, metrics=metrics,
+                  namespace="atmos-science", planner=planner)
+    return add_connect_steps(wf, cc or ConnectConfig())
 
 
 def run_connect_workflow(root: str, cc: Optional[ConnectConfig] = None):

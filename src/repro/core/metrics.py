@@ -149,14 +149,10 @@ class Registry:
 
 def record_serving_totals(registry: "Registry", useful_tokens: int,
                           wall_s: float, decode_s: float) -> None:
-    """End-of-run serving gauges, shared by every serving driver so the
-    continuous-vs-static benchmark always compares identical accounting:
-    wall time, useful tokens/s overall, and decode-only tokens/s (omitted
-    when the run never decoded, e.g. stop-length-1 workloads)."""
-    registry.gauge("serve/wall_s", wall_s)
-    registry.gauge("serve/tok_s", useful_tokens / max(wall_s, 1e-9))
-    if decode_s > 0:
-        registry.gauge("serve/decode_tok_s", useful_tokens / decode_s)
+    """Deprecated alias — the implementation (and the single source of
+    the ``serve/*`` gauge names) moved to ``repro.serving.report``."""
+    from repro.serving.report import record_serving_totals as impl
+    impl(registry, useful_tokens, wall_s, decode_s)
 
 
 @dataclass

@@ -137,8 +137,17 @@ class Workflow:
         return order
 
     # ------------------------------------------------------------------ run
-    def run(self, *, resume: bool = True, only: Optional[str] = None) -> Dict:
+    def run(self, *, resume: bool = True, only: Optional[str] = None,
+            should_stop=None) -> Dict:
+        """Run the DAG.  ``should_stop`` (a zero-arg callable, e.g. a
+        ``repro.api`` Handle's cancel signal) is polled at every step
+        boundary: when it goes true the workflow stops cleanly — steps
+        already completed keep their markers, so a later ``run`` resumes
+        from exactly here."""
         for step in self._topo_order():
+            if should_stop is not None and should_stop():
+                self._emit(step.name, "cancelled")
+                break
             if only is not None and step.name != only:
                 # still load completed deps' outputs for the isolated step
                 if self._ctrl().exists(step.marker_key(self.name)):

@@ -170,9 +170,15 @@ class ElasticTrainer:
     def __init__(self, cluster: Cluster, spec: ElasticTrainSpec, *,
                  store: Optional[ObjectStore] = None,
                  metrics: Optional[Registry] = None,
-                 report: Optional[ElasticRunReport] = None):
+                 report: Optional[ElasticRunReport] = None,
+                 stop: Optional[threading.Event] = None):
         self.cluster = cluster
         self.spec = spec
+        # cooperative cancel (repro.api Handle.cancel): when set, the
+        # supervisor preempt-drains the live segment (which checkpoints on
+        # the way out — the hardware is healthy) and run() returns the
+        # partial result instead of resubmitting
+        self._stop = stop or threading.Event()
         self._ephemeral_store = store is None
         if store is None:
             import tempfile
@@ -344,6 +350,12 @@ class ElasticTrainer:
             time.sleep(spec.poll_s)
             if pod.ctx.stop.is_set() or pod.ctx.preempt.is_set():
                 continue        # draining already — never grow a dying pod
+            if self._stop.is_set():
+                # external cancel: checkpoint-then-evict the segment
+                # (ctx.preempt guarantees the goodbye save), and
+                # _run_segments will NOT resubmit
+                self.cluster.preempt_pod(pod, reason="stop requested")
+                continue
             try:
                 grow = self.controller.decide(decision)
             except RuntimeError:
@@ -375,6 +387,17 @@ class ElasticTrainer:
                     f"refusing to start a concurrent segment")
         return pod
 
+    # ----------------------------------------------------------------- stop
+    def request_stop(self) -> None:
+        """Cooperative cancel: the live segment is preempt-drained (it
+        checkpoints and exits), no further segment is submitted, and
+        ``run()`` returns the partial result."""
+        self._stop.set()
+
+    @property
+    def stopped(self) -> bool:
+        return self._stop.is_set()
+
     # ------------------------------------------------------------------ run
     def run(self) -> Dict[str, Any]:
         """Train to ``spec.steps`` across any node-churn schedule.
@@ -395,10 +418,10 @@ class ElasticTrainer:
             self.report.total_wall_s += time.perf_counter() - t_run0
         assert self.report.global_batch_constant, \
             "elastic invariant violated: global batch changed across meshes"
-        if self._ephemeral_store:
+        if self._ephemeral_store and not self._stop.is_set():
             # trainer-owned throwaway checkpoint dir: don't leak /tmp space
-            # run after run (kept on error paths — raises above — so a
-            # crashed run can still be inspected and resumed)
+            # run after run (kept on error paths — raises above — and on
+            # cancel, so the goodbye checkpoint survives for a resume)
             import shutil
             shutil.rmtree(self.store.root, ignore_errors=True)
         losses = dict(self._losses)
@@ -417,6 +440,8 @@ class ElasticTrainer:
         done = False
         unsched_since: Optional[float] = None
         while not done:
+            if self._stop.is_set():
+                break           # cancelled: the last segment checkpointed
             decision = self.controller.wait_for_capacity(
                 spec.rejoin_timeout_s)
             try:

@@ -59,14 +59,19 @@ class FederatedTrainResult:
 def run_elastic_federated(planner: PlacementPlanner, spec: ElasticTrainSpec,
                           *, ckpt_prefix: str = "checkpoints",
                           max_migrations: int = 3,
-                          metrics: Optional[Registry] = None
-                          ) -> FederatedTrainResult:
+                          metrics: Optional[Registry] = None,
+                          stop=None, on_trainer=None) -> FederatedTrainResult:
     """Run elastic training on the fabric, failing over across sites.
 
     The spec's ``base_shape`` is the preferred mesh; each site hosts
     whatever slice of it fits (the in-site churn controller shrinks the
     data axis as usual).  ``rejoin_timeout_s`` bounds how long a dead
-    site is waited on before the job migrates.
+    site is waited on before the job migrates.  ``stop`` (a
+    ``threading.Event``, e.g. a ``repro.api`` Handle's cancel signal)
+    drains the current site's trainer cooperatively — it checkpoints
+    and exits — and the partial result is returned without migrating.
+    ``on_trainer`` (a callable) observes each site's ElasticTrainer as
+    it is created (live progress probing across migrations).
     """
     fed: FederatedStore = planner.fed
     fabric = fed.fabric
@@ -109,7 +114,9 @@ def run_elastic_federated(planner: PlacementPlanner, spec: ElasticTrainSpec,
             metrics.inc("fabric/migrations")
         result.sites.append(site.name)
         trainer = ElasticTrainer(site.cluster, spec, store=store,
-                                 metrics=metrics, report=report)
+                                 metrics=metrics, report=report, stop=stop)
+        if on_trainer is not None:
+            on_trainer(trainer)
         # the loss log is host state, not checkpoint state: carry it over
         # so the finished run has one loss per step across every site
         trainer._losses.update(carried_losses)
@@ -121,6 +128,8 @@ def run_elastic_federated(planner: PlacementPlanner, spec: ElasticTrainSpec,
             return result
         except CapacityLostError:
             carried_losses.update(trainer._losses)
+            if stop is not None and stop.is_set():
+                raise           # cancelled mid-outage: don't migrate
             if len(result.migrations) >= max_migrations:
                 raise
             if not any(s.name != site.name

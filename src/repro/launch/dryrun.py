@@ -37,6 +37,7 @@ import jax               # noqa: E402
 
 from repro.configs import registry  # noqa: E402
 from repro.configs.base import SHAPES  # noqa: E402
+from repro.launch import cli  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_num_chips  # noqa: E402
 from repro.roofline import hlo as hlo_mod  # noqa: E402
 from repro.runtime import steps as steps_mod  # noqa: E402
@@ -151,7 +152,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    # shared flag helper (launch/cli.py): same --arch surface as the
+    # train/serve drivers, unrestricted for sweep configs
+    cli.add_arch(ap, restrict=False)
     ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")

@@ -26,8 +26,14 @@ from repro.vcluster.scheduler import FairShareScheduler
 
 
 def render_frame(sched: FairShareScheduler, events: Sequence[Event], *,
-                 tail: int = 12, clock=time.time) -> str:
-    """One dashboard frame as text (pure: no I/O, injectable clock)."""
+                 tail: int = 12, clock=time.time, workloads: Sequence = ()
+                 ) -> str:
+    """One dashboard frame as text (pure: no I/O, injectable clock).
+
+    ``workloads`` — ``repro.api`` Handles (or their WorkloadStatus
+    snapshots): every kind the unified API drives (train / serve /
+    batch / workflow) renders as one uniform row, alongside the
+    ``workload`` lifecycle events already in the tail."""
     lines: List[str] = []
     lines.append("=" * 72)
     lines.append(f"  virtual clusters @ {time.strftime('%H:%M:%S', time.localtime(clock()))}"
@@ -53,6 +59,14 @@ def render_frame(sched: FairShareScheduler, events: Sequence[Event], *,
         lines.append(f"  {name:<10} {vc.spec.priority:>5} "
                      f"{vc.spec.weight:>7.2f} {used:>8} "
                      f"{vc.dominant_share():>7.3f} {nq:>7} {nr:>8}")
+    if workloads:
+        lines.append("-" * 72)
+        lines.append(f"  {'workload':<20} {'kind':<12} {'backend':<8} "
+                     f"{'state':<10}")
+        for w in workloads:
+            st = w.status() if hasattr(w, "status") else w
+            lines.append(f"  {st.name:<20} {st.kind:<12} {st.backend:<8} "
+                         f"{st.state.value:<10}")
     if events:
         lines.append("-" * 72)
         for ev in list(events)[-tail:]:

@@ -1,70 +1,75 @@
-"""Serving driver: continuous-batching inference over a request queue.
+"""Serving driver — a thin manifest CLI over the unified workload API.
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
         --smoke --requests 8 --prompt-len 32 --gen 16 --slots 4
+    PYTHONPATH=src python -m repro.launch.serve --manifest serve.json
 
-Requests arrive in a WorkQueue (the paper's Redis job-queue pattern); the
-default scheduler is the continuous batcher (repro.serving): a fixed pool
-of decode slots, per-request prefill into a slotted KV/state cache, one
-fused per-slot decode step per iteration, and immediate evict/refill when
-a request hits its stop length — no inter-request barrier.
+Both forms declare the SAME ``repro.api.ServeJob`` resource and apply it
+through a ``Session``: requests ride a WorkQueue (the paper's Redis
+job-queue pattern) into the continuous batcher (repro.serving) — a fixed
+pool of decode slots, per-request prefill into a slotted KV/state cache,
+one fused per-slot decode step per iteration, immediate evict/refill.
 
 ``--static`` (or ``serve_static``) keeps the legacy drain-then-refill
-batcher: lease a batch, prefill together, decode until the LONGEST request
-in the batch finishes, ack, repeat.  It exists as the baseline the
-serving benchmark (benchmarks/run.py bench_serve) measures continuous
-batching against; short requests idle their decode slots while the
-stragglers run, which is exactly the utilization gap continuous batching
-closes.
+batcher: lease a batch, prefill together, decode until the LONGEST
+request in the batch finishes, ack, repeat.  It exists as the baseline
+the serving benchmark (benchmarks/run.py bench_serve) measures
+continuous batching against — it stays a plain function, not an API
+workload, on purpose.
 
-Both paths serve the same queue items — dicts with ``id``, ``prompt`` and
-an optional per-request ``max_new_tokens`` — and return
-``(results, metrics)`` with ``results[id]`` the generated tokens.
+``serve(...)`` is kept as a deprecated shim delegating to
+``Session.apply`` (pinned by tests/test_api_equivalence.py); the
+``serve/*`` gauge names and the Table-I row live in
+``repro.serving.report`` now (one copy, shared with the engine and the
+scheduler).
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ServeJob, Session
 from repro.configs import registry
 from repro.configs.base import ShapeConfig
-from repro.core.metrics import (Registry, StepReport, record_serving_totals,
-                                table_one)
-from repro.core.queue import WorkQueue
+from repro.core.metrics import Registry, table_one
+from repro.core.orchestrator import Cluster
+from repro.launch import cli
 from repro.launch.mesh import single_device_mesh
 from repro.models import params as pr
 from repro.runtime import steps as steps_mod
-from repro.serving import ServingEngine
+# canonical homes are repro.serving.report; re-exported here for the
+# pre-API callers (benchmarks, examples, tests)
+from repro.serving.report import (GAUGES, make_requests, record_serving_totals,
+                                  request_queue as _request_queue,
+                                  serving_report)
 
 
-def make_requests(n_requests: int, prompt_len: int, gen: int, *,
-                  vocab_size: int, seed: int = 0,
-                  gen_lens: Optional[Sequence[int]] = None) -> List[dict]:
-    """Synthetic request stream: random prompts, per-request stop lengths.
-    ``gen_lens`` (cycled) gives a heterogeneous workload; default is the
-    uniform ``gen`` every request."""
-    rng = np.random.RandomState(seed)
-    out = []
-    for i in range(n_requests):
-        g = gen if gen_lens is None else int(gen_lens[i % len(gen_lens)])
-        out.append({"id": i,
-                    "prompt": rng.randint(1, vocab_size, prompt_len).tolist(),
-                    "max_new_tokens": g})
-    return out
+def serve_job(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
+              gen: int, batch: int = 4, seed: int = 0,
+              gen_lens: Optional[Sequence[int]] = None,
+              lease_timeout: float = 30.0, warmup: bool = False,
+              requests: Optional[Sequence[dict]] = None) -> ServeJob:
+    """The ServeJob resource the legacy flag surface declares."""
+    return ServeJob(
+        name=f"serve-{arch}", arch=arch, smoke=smoke,
+        n_requests=n_requests, prompt_len=prompt_len, max_new_tokens=gen,
+        slots=batch, seed=seed,
+        gen_lens=tuple(gen_lens) if gen_lens is not None else None,
+        lease_timeout=lease_timeout, warmup=warmup,
+        requests=[dict(r) for r in requests] if requests is not None
+        else None)
 
 
-def _request_queue(requests, cfg, *, n_requests, prompt_len, gen, seed,
-                   gen_lens, lease_timeout) -> WorkQueue:
-    if requests is None:
-        requests = make_requests(n_requests, prompt_len, gen,
-                                 vocab_size=cfg.vocab_size, seed=seed,
-                                 gen_lens=gen_lens)
-    return WorkQueue(requests, lease_timeout=lease_timeout)
+def apply_serve(spec: ServeJob, *, timeout: float = 3600.0):
+    """Run one ServeJob on a fresh one-host cluster Session."""
+    session = Session(cluster=Cluster(devices=jax.devices(),
+                                      metrics=Registry()))
+    return session.apply(spec).wait(timeout)
 
 
 def serve(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
@@ -72,24 +77,14 @@ def serve(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
           gen_lens: Optional[Sequence[int]] = None,
           lease_timeout: float = 30.0, warmup: bool = False,
           requests: Optional[Sequence[dict]] = None):
-    """Continuous-batching serve: ``batch`` is the decode-slot pool size.
-
-    Returns ``(results, metrics)``; see module docstring for the request
-    item format and docs/serving.md for the metrics fields.
-    """
-    cfg = registry.get_smoke(arch) if smoke else registry.get_config(arch)
-    par = registry.get_parallel(arch)
-    mesh = single_device_mesh()
-    engine = ServingEngine(cfg, par, mesh, num_slots=batch,
-                           prompt_len=prompt_len, max_new_tokens=gen,
-                           seed=seed)
-    queue = _request_queue(requests, engine.cfg, n_requests=n_requests,
-                           prompt_len=prompt_len, gen=gen, seed=seed,
-                           gen_lens=gen_lens, lease_timeout=lease_timeout)
-    if warmup:
-        with mesh:
-            engine.warmup()
-    return engine.run(queue, default_max_new=gen)
+    """Deprecated shim — declare a ``repro.api.ServeJob`` and apply it
+    through a ``Session`` instead.  Returns ``(results, metrics)`` like
+    the pre-API driver."""
+    out = apply_serve(serve_job(
+        arch, smoke=smoke, n_requests=n_requests, prompt_len=prompt_len,
+        gen=gen, batch=batch, seed=seed, gen_lens=gen_lens,
+        lease_timeout=lease_timeout, warmup=warmup, requests=requests))
+    return out["results"], out["metrics"]
 
 
 def serve_static(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
@@ -165,7 +160,7 @@ def serve_static(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
             last, small = prefill(params, jnp.asarray(prompts), *extras)
             caches = pad_cache(steps_mod.init_cache(cfg, batch, S), small)
             tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
-            metrics.gauge("serve/prefill_s", time.perf_counter() - t0)
+            metrics.gauge(GAUGES.PREFILL_S, time.perf_counter() - t0)
 
             # ---- decode loop: the whole batch runs to max(want)
             out_tokens = [np.asarray(tok)]
@@ -180,42 +175,20 @@ def serve_static(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
             for row, (tid, req) in enumerate(leased):
                 results[req["id"]] = gen_tok[row, :want[row]].tolist()
                 queue.ack(tid, "server")
-                metrics.inc("serve/completed")
-                metrics.inc("serve/tokens_generated", want[row])
+                metrics.inc(GAUGES.COMPLETED)
+                metrics.inc(GAUGES.TOKENS, want[row])
     wall = time.perf_counter() - t_start
     record_serving_totals(metrics, sum(len(v) for v in results.values()),
                           wall, decode_s)
     return results, metrics
 
 
-def serving_report(metrics: Registry, *, step: str = "serve",
-                   devices: int = 1) -> StepReport:
-    """Fold serve metrics into a paper-Table-I-style report column."""
-    s = metrics.summary()
-
-    def g(name, stat="last"):
-        return s.get(name, {}).get(stat, 0.0)
-
-    return StepReport(
-        step=step, pods=1, devices=devices,
-        total_time_s=g("serve/wall_s"),
-        extra={
-            "requests": g("serve/completed", "total"),
-            "tokens": g("serve/tokens_generated", "total"),
-            "tokens/s": g("serve/tok_s"),
-            "decode tokens/s": g("serve/decode_tok_s"),
-            "mean slot occupancy": g("serve/slot_occupancy", "mean"),
-            "p50 latency (s)": g("serve/request_latency_s", "p50"),
-            "p99 latency (s)": g("serve/request_latency_s", "p99"),
-            "p50 ttft (s)": g("serve/ttft_s", "p50"),
-        })
-
-
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="phi4-mini-3.8b",
-                    choices=list(registry.ARCHS))
-    ap.add_argument("--smoke", action="store_true")
+    cli.add_manifest(ap)
+    cli.add_arch(ap)
+    cli.add_smoke(ap)
+    cli.add_seed(ap)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -230,12 +203,27 @@ def main():
     gen_lens = None
     if args.spread:
         gen_lens = [max(1, args.gen // (2 ** i)) for i in range(4)]
-    fn = serve_static if args.static else serve
-    results, metrics = fn(args.arch, smoke=args.smoke,
-                          n_requests=args.requests,
-                          prompt_len=args.prompt_len, gen=args.gen,
-                          batch=args.slots, gen_lens=gen_lens)
-    mode = "static" if args.static else "continuous"
+    if args.static:
+        if args.manifest:
+            raise SystemExit("--static is the benchmark baseline, not an "
+                             "API workload: it cannot run a --manifest "
+                             "declaration")
+        results, metrics = serve_static(
+            args.arch, smoke=args.smoke, n_requests=args.requests,
+            prompt_len=args.prompt_len, gen=args.gen, batch=args.slots,
+            seed=args.seed, gen_lens=gen_lens)
+        mode = "static"
+    else:
+        spec = cli.manifest_spec(args, ServeJob.KIND)
+        if spec is None:
+            spec = serve_job(args.arch, smoke=args.smoke,
+                             n_requests=args.requests,
+                             prompt_len=args.prompt_len, gen=args.gen,
+                             batch=args.slots, seed=args.seed,
+                             gen_lens=gen_lens)
+        out = apply_serve(spec)
+        results, metrics = out["results"], out["metrics"]
+        mode = "continuous"
     print(f"[serve:{mode}] completed {len(results)} requests")
     print(metrics.to_csv())
     print()

@@ -1,19 +1,20 @@
-"""End-to-end training driver — a thin wrapper over the ElasticTrainer.
+"""Training driver — a thin manifest CLI over the unified workload API.
 
     PYTHONPATH=src python -m repro.launch.train --arch phi4-mini-3.8b \
         --steps 50 --batch 4 --seq 128 --smoke --ckpt-dir /tmp/run1
+    PYTHONPATH=src python -m repro.launch.train --manifest train.json
 
-A single-device run is just the degenerate case of elastic training: a
-1-node cluster hosting one supervised Job (repro.elastic).  Everything the
-seed driver wired by hand — mesh, sharded state init, auto-resume, async
-checkpointing, metrics — is the trainer's segment logic, so this launcher
-only resolves configs and shapes.  ``--fail-at`` injects ONE crash at that
-step: the supervisor restores from the latest checkpoint and finishes the
-run in the same invocation (the seed raised and made you re-run by hand).
+Both forms declare the SAME ``repro.api.TrainJob`` resource and apply it
+through a ``Session`` on a one-host cluster; ``--manifest`` is the
+kubectl path (the file is the declaration), the flags are sugar that
+builds the identical manifest.  A single-device run is the degenerate
+case of elastic training (repro.elastic); ``--fail-at`` injects ONE
+crash at that step and the supervisor restores from the latest
+checkpoint within the same invocation.
 
-Losses stay on device inside the step loop; the host syncs only on the
-``log_every`` cadence (the seed's per-step ``float(m["loss"])`` serialized
-dispatch — see repro.elastic.trainer).
+``train(...)`` is kept as a deprecated shim for existing callers — it
+builds the TrainJob and delegates to ``Session.apply`` (the equivalence
+is pinned by tests/test_api_equivalence.py).
 """
 from __future__ import annotations
 
@@ -21,64 +22,80 @@ import argparse
 
 import jax
 
-from repro.configs import registry
-from repro.configs.base import OptimizerConfig
+from repro.api import Session, TrainJob
 from repro.core.metrics import Registry
 from repro.core.orchestrator import Cluster
-from repro.data.objectstore import ObjectStore
-from repro.elastic import ElasticTrainer, ElasticTrainSpec
+from repro.launch import cli
 from repro.launch.mesh import PRODUCTION_MESH_SHAPE
+
+
+def train_job(arch: str, *, steps: int, seq: int, batch: int, smoke: bool,
+              ckpt_dir: str = "", ckpt_every: int = 0, fail_at: int = -1,
+              log_every: int = 10, production_mesh: bool = False,
+              cfg_override=None, seed: int = 0) -> TrainJob:
+    """The TrainJob resource the legacy flag surface declares."""
+    config = None
+    if cfg_override is not None:
+        from repro.api.runners import dataclass_kwargs
+        config = dataclass_kwargs(cfg_override)
+    return TrainJob(
+        name=f"train-{arch}", steps=steps, arch=arch, smoke=smoke,
+        seq_len=seq, global_batch=batch,
+        base_shape=PRODUCTION_MESH_SHAPE if production_mesh else (1, 1),
+        max_data=None if production_mesh else 1,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, keep=2,
+        log_every=log_every, fail_at=fail_at, seed=seed, config=config)
+
+
+def apply_train(spec: TrainJob, *, timeout: float = 3600.0):
+    """Run one TrainJob on a fresh one-host cluster Session."""
+    metrics = Registry()
+    session = Session(cluster=Cluster(devices=jax.devices(),
+                                      metrics=metrics))
+    out = session.apply(spec).wait(timeout)
+    out["metrics"] = metrics
+    return out
 
 
 def train(arch: str, *, steps: int, seq: int, batch: int, smoke: bool,
           ckpt_dir: str = "", ckpt_every: int = 0, fail_at: int = -1,
           log_every: int = 10, production_mesh: bool = False,
           cfg_override=None):
-    if cfg_override is not None:
-        cfg = cfg_override
-        par = registry.get_parallel("phi4-mini-3.8b")   # defaults
-        ocfg = OptimizerConfig()
-    else:
-        cfg = registry.get_smoke(arch) if smoke else registry.get_config(arch)
-        par = registry.get_parallel(arch)
-        ocfg = registry.get_optimizer(arch)
-    ocfg = OptimizerConfig(
-        lr=1e-3, warmup_steps=max(steps // 20, 1), decay_steps=steps,
-        moment_dtype=ocfg.moment_dtype, second_moment=ocfg.second_moment)
-
-    metrics = Registry()
-    cluster = Cluster(devices=jax.devices(), metrics=metrics)
-    spec = ElasticTrainSpec(
-        cfg, par, ocfg, steps=steps, seq_len=seq, global_batch=batch,
-        name=f"train-{arch}",
-        base_shape=PRODUCTION_MESH_SHAPE if production_mesh else (1, 1),
-        max_data=None if production_mesh else 1,
-        ckpt_every=ckpt_every, keep=2, log_every=log_every,
-        fail_at=fail_at, seed=0, data_seed=17)
-    store = ObjectStore(ckpt_dir) if ckpt_dir else None
-    trainer = ElasticTrainer(cluster, spec, store=store, metrics=metrics)
-    out = trainer.run()
+    """Deprecated shim — declare a ``repro.api.TrainJob`` and apply it
+    through a ``Session`` instead.  Kept so pre-API callers (and the
+    equivalence regression) keep working unchanged."""
+    spec = train_job(arch, steps=steps, seq=seq, batch=batch, smoke=smoke,
+                     ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                     fail_at=fail_at, log_every=log_every,
+                     production_mesh=production_mesh,
+                     cfg_override=cfg_override)
+    out = apply_train(spec)
     return {"losses": out["losses"], "params": out["params"],
-            "metrics": metrics, "report": out["report"]}
+            "metrics": out["metrics"], "report": out["report"]}
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="phi4-mini-3.8b",
-                    choices=list(registry.ARCHS))
+    cli.add_manifest(ap)
+    cli.add_arch(ap)
+    cli.add_smoke(ap)
+    cli.add_seed(ap)
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--fail-at", type=int, default=-1,
                     help="inject one crash at this step; the elastic "
                          "supervisor restores and finishes the run")
     args = ap.parse_args()
-    out = train(args.arch, steps=args.steps, seq=args.seq, batch=args.batch,
-                smoke=args.smoke, ckpt_dir=args.ckpt_dir,
-                ckpt_every=args.ckpt_every, fail_at=args.fail_at)
+    spec = cli.manifest_spec(args, TrainJob.KIND)
+    if spec is None:
+        spec = train_job(args.arch, steps=args.steps, seq=args.seq,
+                         batch=args.batch, smoke=args.smoke,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         fail_at=args.fail_at, seed=args.seed)
+    out = apply_train(spec)
     first, last = out["losses"][0], out["losses"][-1]
     print(f"[train] loss {first:.4f} -> {last:.4f} "
           f"({'improved' if last < first else 'NOT improved'})")

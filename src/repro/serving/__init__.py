@@ -2,10 +2,17 @@
 
 Split host/device: ``scheduler`` is the deterministic slot/lease policy
 (no jax — testable with a fake clock), ``engine`` owns the jitted prefill,
-slotted cache and fused per-slot decode step.  ``repro.launch.serve`` is
-the CLI driver; docs/serving.md is the usage guide.
+slotted cache and fused per-slot decode step, ``report`` holds the
+``serve/*`` gauge namespace, synthetic request streams and the Table-I
+row.  ``repro.launch.serve`` is the CLI driver; docs/serving.md is the
+usage guide.
 """
 from repro.serving.engine import ServingEngine
+from repro.serving.report import (GAUGES, make_requests, record_serving_totals,
+                                  request_queue, serving_report,
+                                  serving_summary)
 from repro.serving.scheduler import ContinuousScheduler, Request, Slot
 
-__all__ = ["ServingEngine", "ContinuousScheduler", "Request", "Slot"]
+__all__ = ["ServingEngine", "ContinuousScheduler", "Request", "Slot",
+           "GAUGES", "make_requests", "record_serving_totals",
+           "request_queue", "serving_report", "serving_summary"]

@@ -33,8 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
-from repro.core.metrics import Registry, record_serving_totals
+from repro.core.metrics import Registry
 from repro.core.queue import WorkQueue
+from repro.serving.report import GAUGES, record_serving_totals
 from repro.models import params as pr
 from repro.runtime import steps as steps_mod
 from repro.serving.scheduler import ContinuousScheduler
@@ -124,7 +125,7 @@ class ServingEngine:
             jnp.asarray(self._pad_prompt(prompt)), jnp.int32(slot_index),
             *self._extras)
         first = int(first)
-        self.metrics.gauge("serve/prefill_s", time.perf_counter() - t0)
+        self.metrics.gauge(GAUGES.PREFILL_S, time.perf_counter() - t0)
         return first
 
     def decode_step(self, tokens, positions) -> np.ndarray:
@@ -176,7 +177,7 @@ class ServingEngine:
                 if should_stop is not None and should_stop():
                     # preempted between steps: unfinished slots are NOT
                     # acked — their queue leases expire and requeue
-                    self.metrics.inc("serve/preempted")
+                    self.metrics.inc(GAUGES.PREEMPTED)
                     break
                 for slot in sched.admit():
                     # engine capacity bounds the stop length: past

@@ -45,6 +45,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.metrics import Registry
 from repro.core.queue import WorkQueue
+from repro.serving.report import GAUGES
 
 
 @dataclass(frozen=True)
@@ -154,7 +155,7 @@ class ContinuousScheduler:
             slot.admitted_at = now
             slot.lease_renewed_at = now
             slot.first_token_at = None
-            self.metrics.inc("serve/admitted")
+            self.metrics.inc(GAUGES.ADMITTED)
             filled.append(slot)
         return filled
 
@@ -166,7 +167,7 @@ class ContinuousScheduler:
         slot.tokens.append(int(first_token))
         slot.pos = int(prompt_pos)
         slot.first_token_at = self._clock()
-        self.metrics.gauge("serve/ttft_s",
+        self.metrics.gauge(GAUGES.TTFT_S,
                            slot.first_token_at - slot.admitted_at)
         return self._evict_finished([slot])
 
@@ -198,8 +199,8 @@ class ContinuousScheduler:
         if len(step_tokens) != len(self.slots):
             raise ValueError(
                 f"expected {len(self.slots)} tokens, got {len(step_tokens)}")
-        self.metrics.gauge("serve/slot_occupancy", self.occupancy)
-        self.metrics.inc("serve/decode_steps")
+        self.metrics.gauge(GAUGES.SLOT_OCCUPANCY, self.occupancy)
+        self.metrics.inc(GAUGES.DECODE_STEPS)
         stepped = []
         for slot, tok in zip(self.slots, step_tokens):
             if slot.free:
@@ -219,14 +220,14 @@ class ContinuousScheduler:
             req = slot.request
             self._results[req.rid] = list(slot.tokens)
             if self.queue.ack(slot.task_id, self.worker):
-                self.metrics.inc("serve/completed")
+                self.metrics.inc(GAUGES.COMPLETED)
             else:
                 # lease expired mid-flight and the task was reclaimed;
                 # at-least-once semantics: our result stands, the retry's
                 # ack will be ignored as stale.
-                self.metrics.inc("serve/stale_ack")
-            self.metrics.inc("serve/tokens_generated", len(slot.tokens))
-            self.metrics.gauge("serve/request_latency_s",
+                self.metrics.inc(GAUGES.STALE_ACK)
+            self.metrics.inc(GAUGES.TOKENS, len(slot.tokens))
+            self.metrics.gauge(GAUGES.LATENCY_S,
                                now - slot.admitted_at)
             done.append((req.rid, list(slot.tokens)))
             slot.clear()
@@ -245,10 +246,10 @@ class ContinuousScheduler:
                 continue
             if self.queue.renew(slot.task_id, self.worker):
                 slot.lease_renewed_at = now
-                self.metrics.inc("serve/lease_renewals")
+                self.metrics.inc(GAUGES.LEASE_RENEWALS)
                 renewed += 1
             else:
-                self.metrics.inc("serve/lease_lost")
+                self.metrics.inc(GAUGES.LEASE_LOST)
                 slot.clear()
         return renewed
 

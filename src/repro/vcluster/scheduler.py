@@ -49,13 +49,14 @@ class TenantJob:
     spec: JobSpec
     site_hint: Optional[str]
     submitted: float
-    state: str = "queued"        # queued | running | done | failed
+    state: str = "queued"     # queued | running | done | failed | cancelled
     placements: List[Tuple[str, Job]] = field(default_factory=list)
     preemptions: int = 0
     done_ts: Optional[float] = None
     error: Optional[str] = None
     _event: threading.Event = field(default_factory=threading.Event)
     _preempting: bool = False    # a preemption was fired on its behalf
+    _cancelled: bool = False     # user cancel: drained pods don't requeue
 
     @property
     def need(self) -> int:
@@ -253,6 +254,40 @@ class FairShareScheduler:
         self.bus.publish("sched", source=claim.tenant, action="released",
                          site=claim.site)
 
+    def cancel(self, tj: TenantJob, *, reason: str = "cancelled") -> bool:
+        """Cancel one tenant job.  A queued job dequeues immediately; a
+        running one is checkpoint-then-evict drained (cooperative
+        ``preempt_pod`` + the usual hard-evict grace) and ``_reap``
+        marks it terminal ``cancelled`` instead of requeueing.  Returns
+        False when the job is already terminal."""
+        with self._lock:
+            if tj.state in ("done", "failed", "cancelled"):
+                return False
+            tj._cancelled = True
+            if tj in self._pending:
+                self._pending.remove(tj)
+                tj.state, tj.done_ts = "cancelled", time.monotonic()
+                tj._event.set()
+                cluster, job = None, None
+            else:
+                cluster = self.fabric.sites[tj.site].cluster \
+                    if tj.site else None
+                job = tj.job
+        if cluster is None or job is None:
+            self.metrics.inc(f"vcluster/cancelled/{tj.tenant}")
+            self.bus.publish("sched", source=tj.tenant, action="cancelled",
+                             job=tj.spec.name)
+            return True
+        deadline = time.monotonic() + self.preempt_grace_s
+        for pod in job.pods:
+            if pod.state in (PodState.PENDING, PodState.RUNNING):
+                cluster.preempt_pod(pod, reason=reason)
+                with self._lock:
+                    self._graces.append((cluster, pod, deadline))
+        self.bus.publish("sched", source=tj.tenant,
+                         action="cancel-requested", job=tj.spec.name)
+        return True
+
     # ------------------------------------------------------------ reconcile
     def step(self) -> int:
         """One reconcile pass: reap, expire preempt graces, place queued
@@ -288,6 +323,16 @@ class FairShareScheduler:
                     if p.state == PodState.FAILED and \
                             p.restarts < job.spec.backoff_limit:
                         cluster.retire_pod(p)
+                if tj._cancelled:
+                    # the drain was a user cancel (FairShareScheduler.
+                    # cancel), not a fair-share eviction: terminal, with
+                    # whatever the pods checkpointed preserved
+                    tj.state, tj.done_ts = "cancelled", time.monotonic()
+                    tj._event.set()
+                    self.metrics.inc(f"vcluster/cancelled/{tj.tenant}")
+                    self.bus.publish("sched", source=tj.tenant,
+                                     action="cancelled", job=tj.spec.name)
+                    continue
                 tj.state = "queued"
                 tj.preemptions += 1
                 tj._preempting = False

@@ -153,8 +153,8 @@ class VirtualCluster:
         return Workflow(name, **kw)
 
     def run_elastic(self, tspec, *, site: str, devices: int,
-                    store=None, min_devices: Optional[int] = None
-                    ) -> Dict[str, Any]:
+                    store=None, min_devices: Optional[int] = None,
+                    stop=None, on_trainer=None) -> Dict[str, Any]:
         """Self-healing elastic training inside this tenant's slice.
 
         Registers a capacity claim for up to ``devices`` at ``site`` and
@@ -166,27 +166,37 @@ class VirtualCluster:
         spec's ``rejoin_timeout_s``), and training resumes from the last
         checkpoint when the grant returns — steps lost stay within the
         elastic path's existing ``ckpt_every`` bound.
+
+        ``stop`` (a ``threading.Event``, e.g. a ``repro.api`` Handle's
+        cancel signal) ends the run cooperatively: the live segment
+        checkpoints and exits, and the partial result is returned.
         """
         from repro.elastic.trainer import ElasticTrainer
         claim = self.claim(site, devices, min_devices=min_devices)
         view = self.view(site, claim)
         spec = dataclasses.replace(tspec, namespace=self.namespace)
         trainer = ElasticTrainer(view, spec, store=store,
-                                 metrics=self.sched.metrics)
+                                 metrics=self.sched.metrics, stop=stop)
+        if on_trainer is not None:
+            on_trainer(trainer)
         try:
             return trainer.run()
         finally:
             claim.release()
 
     def serve(self, build_engine, requests, *, site: Optional[str] = None,
-              lease_timeout: float = 30.0, default_max_new: int = 16):
+              lease_timeout: float = 30.0, default_max_new: int = 16,
+              should_stop=None):
         """Submit a preemptible continuous-batching serving pod.
 
         ``build_engine()`` must return a ``repro.serving.ServingEngine``
         (constructed inside the pod so compilation happens on the pod's
         clock).  The engine polls the pod's ``should_stop`` between fused
         decode steps: a preemption exits cleanly and unacked requests'
-        leases expire back to the queue for the next placement.
+        leases expire back to the queue for the next placement.  An
+        extra ``should_stop`` callable (e.g. a ``repro.api`` Handle's
+        cancel signal) is OR-ed in, so an API cancel drains the engine
+        the same cooperative way a fair-share eviction does.
         Returns (TenantJob, WorkQueue).
         """
         from repro.core.queue import WorkQueue
@@ -194,8 +204,13 @@ class VirtualCluster:
 
         def serve_pod(ctx):
             engine = build_engine()
+
+            def stop():
+                return ctx.should_stop() or (should_stop is not None and
+                                             should_stop())
+
             results, _ = engine.run(queue, default_max_new=default_max_new,
-                                    should_stop=ctx.should_stop)
+                                    should_stop=stop)
             return results
 
         job = self.submit(JobSpec(f"serve-{self.name}", serve_pod,

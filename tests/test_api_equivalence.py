@@ -1,0 +1,93 @@
+"""The deprecated launch.train/launch.serve shims and the Session.apply
+path must produce identical results — same losses, same generations,
+same Table-I rows (modulo wall-clock fields) — on the CPU smoke configs.
+Plus the serving-report regression: zero-completed-request runs still
+render a row instead of raising."""
+import jax
+
+from repro.api import ServeJob, Session, TrainJob
+from repro.core.metrics import Registry, table_one
+from repro.core.orchestrator import Cluster
+from repro.launch.serve import serve, serve_job
+from repro.launch.train import train, train_job
+from repro.serving.report import serving_report
+
+ARCH = "phi4-mini-3.8b"
+
+# Table-I fields that are a pure function of the workload (not of the
+# wall clock): the equivalence contract compares exactly these.
+DETERMINISTIC_ROW_FIELDS = ("requests", "tokens")
+
+
+def test_train_shim_matches_session():
+    shim = train(ARCH, steps=6, seq=16, batch=2, smoke=True, log_every=1)
+    session = Session(cluster=Cluster(devices=jax.devices(),
+                                      metrics=Registry()))
+    spec = train_job(ARCH, steps=6, seq=16, batch=2, smoke=True,
+                     log_every=1)
+    assert isinstance(spec, TrainJob)
+    out = session.apply(spec).wait(300)
+    assert shim["losses"] == out["losses"], "identical optimizer trajectory"
+    for field in ("steps", "global_batch", "seq_len"):
+        assert getattr(shim["report"], field) == \
+            getattr(out["report"], field)
+    assert [s.mesh_shape for s in shim["report"].segments] == \
+        [s.mesh_shape for s in out["report"].segments]
+
+
+def test_serve_shim_matches_session():
+    kw = dict(smoke=True, n_requests=4, prompt_len=8, gen=4, batch=2,
+              gen_lens=[4, 2])
+    shim_results, shim_metrics = serve(ARCH, **kw)
+    session = Session(cluster=Cluster(devices=jax.devices(),
+                                      metrics=Registry()))
+    spec = serve_job(ARCH, **kw)
+    assert isinstance(spec, ServeJob)
+    out = session.apply(spec).wait(300)
+    assert shim_results == out["results"], "identical generations"
+
+    shim_row = serving_report(shim_metrics)
+    api_row = out["report"]
+    for field in DETERMINISTIC_ROW_FIELDS:
+        assert shim_row.extra[field] == api_row.extra[field], field
+    # both rows render through the same Table-I machinery
+    assert table_one([shim_row]).splitlines()[0]
+    assert table_one([api_row]).splitlines()[0]
+
+
+def test_train_pieces_accepts_custom_arch_with_config():
+    """The pre-API pattern train(cfg.name, cfg_override=cfg) names a
+    model the registry has never heard of; with a config override the
+    arch must not be forced through the registry."""
+    from repro.api.runners import train_pieces
+    cfg, par, ocfg = train_pieces(TrainJob(
+        name="t", steps=4, arch="lm-20m",
+        config=dict(name="lm-20m", family="dense", num_layers=2,
+                    d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                    vocab_size=128, head_dim=16)))
+    assert cfg.name == "lm-20m" and cfg.d_model == 32
+    assert ocfg.decay_steps == 4
+
+
+def test_serving_summary_only_contains_gauge_names():
+    from repro.core.metrics import Registry
+    from repro.serving.report import serving_summary
+    keys = set(serving_summary(Registry()))
+    assert all(k.startswith("serve/") for k in keys), keys
+
+
+def test_serving_report_tolerates_never_recorded_stats():
+    """A smoke run with 0 completed requests (or a metrics registry that
+    never saw a single serve gauge) still reports a row of zeros."""
+    empty = Registry()
+    row = serving_report(empty)
+    assert row.total_time_s == 0.0
+    assert row.extra["requests"] == 0.0
+    assert row.extra["p99 latency (s)"] == 0.0
+    assert "| requests |" in table_one([row]).replace("  ", " ")
+
+    partial = Registry()                 # wall recorded, nothing completed
+    partial.gauge("serve/wall_s", 1.5)
+    row2 = serving_report(partial)
+    assert row2.total_time_s == 1.5
+    assert row2.extra["tokens"] == 0.0

@@ -1,0 +1,193 @@
+"""Manifest round-trip + validation properties for repro.api resources.
+
+The contract: every workload spec survives ``to_manifest() ->
+json -> from_manifest()`` unchanged (losslessness), and malformed
+manifests — unknown kind, missing required field, wrong type, unknown
+field — fail validation with the offending field NAMED."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.api import (BatchJob, ManifestError, ServeJob, TrainJob,
+                       WorkflowRun, from_json, from_manifest,
+                       resolve_entrypoint)
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    names = st.text(alphabet="abcdefghijklmnopqrstuvwxyz0123456789-",
+                    min_size=1, max_size=12)
+    opt_names = st.none() | names
+    small_floats = st.floats(min_value=0.5, max_value=600.0,
+                             allow_nan=False, allow_infinity=False)
+    json_dicts = st.none() | st.dictionaries(
+        names, st.integers(0, 99) | small_floats | st.booleans() | names,
+        max_size=3)
+
+    train_jobs = st.builds(
+        TrainJob,
+        name=names, steps=st.integers(1, 500),
+        arch=st.sampled_from(["phi4-mini-3.8b", "gemma2-9b"]),
+        smoke=st.booleans(), seq_len=st.integers(1, 256),
+        global_batch=st.integers(1, 64),
+        base_shape=st.tuples(st.integers(1, 8), st.integers(1, 8)),
+        max_data=st.none() | st.integers(1, 8),
+        ckpt_dir=st.sampled_from(["", "/tmp/ckpt"]),
+        ckpt_every=st.integers(0, 10), keep=st.none() | st.integers(0, 5),
+        log_every=st.integers(0, 20), fail_at=st.integers(-1, 99),
+        seed=st.integers(0, 9), data_seed=st.integers(0, 9),
+        rejoin_timeout_s=small_floats, verbose=st.booleans(),
+        namespace=opt_names, config=json_dicts, optimizer=json_dicts,
+        site=opt_names, devices=st.none() | st.integers(1, 8),
+        min_devices=st.none() | st.integers(0, 4))
+
+    serve_jobs = st.builds(
+        ServeJob,
+        name=names, arch=st.just("phi4-mini-3.8b"), smoke=st.booleans(),
+        n_requests=st.integers(0, 32), prompt_len=st.integers(1, 64),
+        max_new_tokens=st.integers(1, 32), slots=st.integers(1, 8),
+        seed=st.integers(0, 9),
+        gen_lens=st.none() | st.tuples(st.integers(1, 9),
+                                       st.integers(1, 9)),
+        lease_timeout=small_floats, warmup=st.booleans(),
+        requests=st.none() | st.lists(
+            st.fixed_dictionaries(
+                {"id": st.integers(0, 99),
+                 "prompt": st.lists(st.integers(1, 50), min_size=1,
+                                    max_size=4)}),
+            max_size=3),
+        site=opt_names)
+
+    batch_jobs = st.builds(
+        BatchJob,
+        name=names, replicas=st.integers(1, 8),
+        devices_per_pod=st.integers(0, 4),
+        backoff_limit=st.integers(0, 5),
+        priority=st.none() | st.integers(-5, 5), namespace=opt_names,
+        site=opt_names, entrypoint=st.none() | st.just("builtins:repr"),
+        params=json_dicts)
+
+    workflow_runs = st.builds(
+        WorkflowRun,
+        name=names, namespace=opt_names, resume=st.booleans(),
+        only=opt_names,
+        entrypoint=st.none() |
+        st.just("repro.apps.connect.pipeline:add_connect_steps"),
+        params=json_dicts)
+
+    all_specs = train_jobs | serve_jobs | batch_jobs | workflow_runs
+
+    @given(all_specs)
+    def test_manifest_round_trip_lossless(spec):
+        """spec -> manifest -> JSON -> manifest -> spec is the identity."""
+        manifest = spec.to_manifest()
+        wire = json.loads(json.dumps(manifest))  # a real serialization hop
+        back = from_manifest(wire)
+        assert back == spec
+        assert back.to_manifest() == manifest
+        assert from_json(spec.to_json()) == spec
+
+    @given(batch_jobs)
+    def test_runtime_fields_stay_out_of_manifests(spec):
+        """The runtime-only fn slot never rides in (or breaks) a
+        manifest."""
+        with_fn = dataclasses.replace(spec, fn=lambda ctx: "hi")
+        assert with_fn == spec                   # compare=False
+        assert "fn" not in with_fn.to_manifest()["spec"]
+        assert from_manifest(with_fn.to_manifest()) == spec
+
+
+def test_round_trip_without_hypothesis():
+    """A deterministic round-trip pin so the law is still exercised when
+    hypothesis is absent (the property suite above goes deeper)."""
+    specs = [
+        TrainJob(name="t", steps=7, base_shape=(2, 2), max_data=None,
+                 optimizer={"lr": 0.01}, site="gpu", devices=2),
+        ServeJob(name="s", gen_lens=(4, 2),
+                 requests=[{"id": 0, "prompt": [1, 2]}]),
+        BatchJob(name="b", replicas=3, entrypoint="builtins:repr",
+                 params={"x": 1}),
+        WorkflowRun(name="w", only="train",
+                    entrypoint="repro.apps.connect.pipeline:"
+                               "add_connect_steps"),
+        # tuples nested in free-form dict fields canonicalize to lists
+        # at construction, so they too survive the JSON hop unchanged
+        WorkflowRun(name="w2", params={"ffn": {"fov": (8, 16, 16)}}),
+        TrainJob(name="t2", steps=3, config={"shape": (4, 4)}),
+    ]
+    for spec in specs:
+        wire = json.loads(json.dumps(spec.to_manifest()))
+        assert from_manifest(wire) == spec
+
+
+def manifest(kind="TrainJob", name="t", spec=None, **top):
+    m = {"kind": kind, "metadata": {"name": name},
+         "spec": {"steps": 5} if spec is None else spec}
+    m.update(top)
+    return m
+
+
+@pytest.mark.parametrize("bad,field,hint", [
+    (manifest(kind="CronJob"), "kind", "unknown kind"),
+    (manifest(kind=None), "kind", "unknown kind"),
+    ({"kind": "TrainJob", "metadata": {}}, "metadata.name", "required"),
+    (manifest(spec={}), "spec.steps", "required field missing"),
+    (manifest(spec={"steps": "ten"}), "spec.steps", "expected an int"),
+    (manifest(spec={"steps": True}), "spec.steps", "expected an int"),
+    (manifest(spec={"steps": 5, "smoke": "yes"}), "spec.smoke",
+     "expected a bool"),
+    (manifest(spec={"steps": 5, "base_shape": [1]}), "spec.base_shape",
+     "expected 2 items"),
+    (manifest(spec={"steps": 5, "warp_drive": 1}), "spec.warp_drive",
+     "unknown field"),
+    (manifest(spec={"steps": 0}), "spec.steps", ">= 1"),
+    (manifest(apiVersion="repro/v2"), "apiVersion", "unsupported version"),
+    (manifest(kind="ServeJob", spec={"slots": 0}), "spec.slots", ">= 1"),
+    (manifest(kind="ServeJob", spec={"gen_lens": ["a"]}),
+     "spec.gen_lens[0]", "expected an int"),
+    (manifest(kind="ServeJob", spec={"requests": [{"id": 1}]}),
+     "spec.requests[0]", "'id' and 'prompt'"),
+    (manifest(kind="BatchJob", spec={"replicas": 0}), "spec.replicas",
+     ">= 1"),
+    (manifest(kind="BatchJob", spec={"entrypoint": "no-colon"}),
+     "spec.entrypoint", "pkg.module:attr"),
+    (manifest(kind="WorkflowRun", spec={"resume": 1}), "spec.resume",
+     "expected a bool"),
+])
+def test_malformed_manifests_name_the_field(bad, field, hint):
+    with pytest.raises(ManifestError) as e:
+        from_manifest(bad)
+    assert e.value.field == field, f"expected {field}, got {e.value.field}"
+    assert field in str(e.value)        # the message names the field
+    assert hint in str(e.value)
+
+
+def test_direct_construction_validates_too():
+    with pytest.raises(ManifestError, match="spec.steps"):
+        TrainJob(name="t", steps=0)
+    with pytest.raises(ManifestError, match="metadata.name"):
+        ServeJob(name="")
+
+
+def test_entrypoint_resolution():
+    assert resolve_entrypoint("builtins:repr") is repr
+    with pytest.raises(ManifestError, match="spec.entrypoint"):
+        resolve_entrypoint("not.a.module:thing")
+    with pytest.raises(ManifestError, match="spec.entrypoint"):
+        resolve_entrypoint("builtins:no_such_attr")
+    # the declarative twin of the runtime fn slot
+    job = BatchJob(name="b", entrypoint="builtins:repr")
+    assert job.resolve_fn() is repr
+    with pytest.raises(ManifestError, match="spec.entrypoint"):
+        BatchJob(name="b").resolve_fn()
+
+
+def test_from_json_rejects_garbage():
+    with pytest.raises(ManifestError, match="not valid JSON"):
+        from_json("{nope")

@@ -1,0 +1,260 @@
+"""Session.apply drives every workload kind on every backend, and
+Handle.cancel() drains cooperatively (training keeps its checkpoint)."""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.api import (BatchJob, ServeJob, Session, TrainJob, WorkflowRun,
+                       WorkloadState)
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.core.orchestrator import Cluster
+from repro.core.workflow import Step
+from repro.data.objectstore import ObjectStore
+from repro.fabric import Fabric, FederatedStore, PlacementPlanner
+from repro.vcluster import FairShareScheduler, TenantSpec
+
+
+def tiny_train(name, **kw):
+    kw.setdefault("seq_len", 16)
+    kw.setdefault("global_batch", 2)
+    kw.setdefault("log_every", 1)
+    kw.setdefault("verbose", False)
+    return TrainJob(name=name, **kw)
+
+
+# --------------------------------------------------------------- cluster
+def test_cluster_batch_lifecycle_and_events():
+    session = Session(cluster=Cluster(devices=jax.devices()))
+    sub = session.bus.subscribe()
+    handle = session.apply(BatchJob(name="hello", replicas=2),
+                           fn=lambda ctx: f"hi-{ctx.pod_id}")
+    out = handle.wait(60)
+    assert sorted(out["results"]) == ["hi-hello-0", "hi-hello-1"]
+    states = [e["state"] for e in handle.events()]
+    assert states == ["Pending", "Placing", "Running", "Succeeded"]
+    kinds = {(e.kind, e.data.get("state")) for e in sub.poll()}
+    assert ("workload", "Succeeded") in kinds       # monitor-visible
+    assert session.status()[0].state == WorkloadState.SUCCEEDED
+
+
+def test_cluster_batch_entrypoint_and_cancel():
+    session = Session(cluster=Cluster(devices=jax.devices()))
+    # declarative fn: a manifest-only BatchJob
+    h = session.apply({"kind": "BatchJob", "metadata": {"name": "decl"},
+                       "spec": {"entrypoint": "builtins:repr"}})
+    assert "PodCtx" in h.wait(60)["results"][0]
+
+    # cancel: the pod drains cooperatively via the preempt signal
+    def slowpoke(ctx):
+        while not ctx.should_stop():
+            time.sleep(0.01)
+        return "drained"
+
+    h2 = session.apply(BatchJob(name="slow"), fn=slowpoke)
+    while h2.state != WorkloadState.RUNNING:
+        time.sleep(0.01)
+    time.sleep(0.05)
+    assert h2.cancel(wait=True, timeout=60)
+    assert h2.state == WorkloadState.CANCELLED
+    assert h2.result()["results"] == ["drained"]
+    assert not h2.cancel()                   # already terminal
+
+
+def test_cluster_workflow_and_cancel(tmp_path):
+    session = Session(cluster=Cluster(devices=jax.devices()),
+                      store=ObjectStore(str(tmp_path)))
+    ran = []
+
+    def define(wf):
+        wf.add(Step("a", lambda ctx: ran.append("a") or {"n": 1}))
+        wf.add(Step("b", lambda ctx: ran.append("b") or {"n": 2},
+                    deps=["a"]))
+
+    out = session.apply(WorkflowRun(name="wf"), define=define).wait(60)
+    assert ran == ["a", "b"]
+    assert out["results"]["b"] == {"n": 2}
+    assert [r.step for r in out["reports"]] == ["a", "b"]
+
+    # cancel between steps: a completes, b never starts, markers persist
+    gate = threading.Event()
+
+    def define_slow(wf):
+        wf.add(Step("a", lambda ctx: (gate.wait(10), {"n": 1})[1]))
+        wf.add(Step("b", lambda ctx: ran.append("b2"), deps=["a"]))
+
+    h = session.apply(WorkflowRun(name="wf2"), define=define_slow)
+    while h.state != WorkloadState.RUNNING:
+        time.sleep(0.01)
+    h.cancel()
+    gate.set()                       # step a finishes AFTER the cancel
+    h.wait(60)
+    assert h.state == WorkloadState.CANCELLED
+    assert "b2" not in ran
+    assert h.result()["results"] == {"a": {"n": 1}}
+    # the completed step's marker survives -> a re-apply resumes past it
+    store = ObjectStore(str(tmp_path))
+    assert store.exists("workflows/wf2/a/_COMPLETE")
+
+
+def test_cluster_train_cancel_preserves_checkpoint(tmp_path):
+    """The acceptance contract: cancel() drains a RUNNING training
+    workload to CANCELLED via the cooperative preempt path, and the
+    goodbye checkpoint is there to resume from."""
+    session = Session(cluster=Cluster(devices=jax.devices()))
+    ckpt = str(tmp_path / "ckpt")
+    h = session.apply(tiny_train("cancel-me", steps=500, ckpt_every=2,
+                                 ckpt_dir=ckpt))
+    while h.status().observed.get("step", -1) < 4:
+        time.sleep(0.02)
+    assert h.cancel(wait=True, timeout=120)
+    assert h.state == WorkloadState.CANCELLED
+    out = h.result()
+    seg = out["report"].segments[-1]
+    assert seg.outcome == "preempted"        # the cooperative drain path
+    last = seg.end
+    assert last < 499                        # it really stopped early
+    # checkpoint preserved at (at least) the drained segment's last step
+    ckpt_step = Checkpointer(ObjectStore(ckpt)).latest_step()
+    assert ckpt_step == last, (ckpt_step, last)
+    # ...and a fresh TrainJob resumes from it instead of step 0
+    out2 = session.apply(tiny_train("resume", steps=last + 3,
+                                    ckpt_dir=ckpt)).wait(300)
+    assert out2["report"].segments[0].start == last + 1
+
+
+# ---------------------------------------------------------------- fabric
+def make_fabric():
+    dev = jax.devices()[0]
+    fabric = Fabric()
+    fabric.add_site("big", cluster=Cluster(devices=[dev, dev, dev]))
+    fabric.add_site("small", cluster=Cluster(devices=[dev]))
+    fabric.connect("big", "small", gbps=10.0, latency_ms=1.0)
+    return fabric
+
+
+def test_fabric_batch_places_and_runs():
+    fabric = make_fabric()
+    session = Session(fabric=fabric)
+    h = session.apply(BatchJob(name="fb", devices_per_pod=1),
+                      fn=lambda ctx: ctx.site)
+    out = h.wait(60)
+    assert out["results"] == ["big"]         # least-loaded, most capacity
+    assert out["site"] == "big"
+    h2 = session.apply(BatchJob(name="pin", site="small"),
+                       fn=lambda ctx: ctx.site)
+    assert h2.wait(60)["results"] == ["small"]
+
+
+def test_fabric_workflow_needs_planner_and_places():
+    fabric = make_fabric()
+    bare = Session(fabric=fabric)
+    h = bare.apply(WorkflowRun(name="nope"), define=lambda wf: None)
+    with pytest.raises(RuntimeError, match="planner"):
+        h.wait(60)
+
+    planner = PlacementPlanner(FederatedStore(fabric))
+    session = Session(fabric=fabric, planner=planner)
+    planner.fed.put("data/x", b"z" * 1024, "small")
+
+    def define(wf):
+        wf.add(Step("read", lambda ctx: {"n": len(ctx.store.get("data/x"))},
+                    inputs=["data/x"]))
+
+    out = session.apply(WorkflowRun(name="wf"), define=define).wait(60)
+    assert out["results"]["read"] == {"n": 1024}
+    assert out["reports"][0].site == "small"     # data-local placement
+
+
+def test_fabric_serve_runs_as_placed_pod():
+    fabric = make_fabric()
+    session = Session(fabric=fabric)
+    out = session.apply(ServeJob(
+        name="fs", slots=2, prompt_len=8, max_new_tokens=4, site="small",
+        requests=[{"id": i, "prompt": [1 + i] * 8, "max_new_tokens": 4}
+                  for i in range(3)])).wait(300)
+    assert out["site"] == "small"
+    assert len(out["results"]) == 3
+    assert out["report"].extra["requests"] == 3
+
+
+def test_fabric_train_runs_elastic_federated():
+    fabric = make_fabric()
+    session = Session(fabric=fabric,
+                      planner=PlacementPlanner(FederatedStore(fabric)))
+    out = session.apply(tiny_train("fed", steps=4)).wait(600)
+    assert len(out["losses"]) == 4
+    assert out["sites"], "must record the hosting site"
+    assert out["migrations"] == []
+
+
+# ---------------------------------------------------------------- tenant
+def make_sched():
+    dev = jax.devices()[0]
+    fabric = Fabric()
+    fabric.add_site("s0", cluster=Cluster(devices=[dev, dev]))
+    fabric.add_site("s1", cluster=Cluster(devices=[dev]))
+    fabric.connect("s0", "s1", gbps=10.0, latency_ms=1.0)
+    return FairShareScheduler(fed=FederatedStore(fabric),
+                              reconcile_s=0.01)
+
+
+def test_tenant_batch_serve_workflow():
+    sched = make_sched()
+    vc = sched.create_tenant(TenantSpec("alice"))
+    session = Session(tenant=vc)
+    with sched:
+        out = session.apply(BatchJob(name="tb", devices_per_pod=1),
+                            fn=lambda ctx: "ok").wait(60)
+        assert out["results"] == ["ok"]
+
+        # a queued job cancelled before placement dequeues cleanly
+        blocker = session.apply(
+            BatchJob(name="hog", devices_per_pod=2, site="s0"),
+            fn=lambda ctx: time.sleep(0.5) or "hog")
+        queued = session.apply(
+            BatchJob(name="stuck", devices_per_pod=2, site="s0"),
+            fn=lambda ctx: "never")
+        time.sleep(0.1)
+        queued.cancel(wait=True, timeout=30)
+        assert queued.state == WorkloadState.CANCELLED
+        assert queued.result()["results"] == []
+        assert blocker.wait(60)["results"] == ["hog"]
+
+        def define(wf):
+            wf.add(Step("t", lambda ctx: {"tenant": ctx.namespace}))
+
+        wout = session.apply(WorkflowRun(name="twf"),
+                             define=define).wait(60)
+        assert wout["results"]["t"] == {"tenant": "tenant-alice"}
+
+        sout = session.apply(ServeJob(
+            name="tserve", slots=2, prompt_len=8, max_new_tokens=4,
+            requests=[{"id": i, "prompt": [1 + i] * 8,
+                       "max_new_tokens": 4} for i in range(3)])).wait(300)
+        assert len(sout["results"]) == 3
+        assert all(len(v) == 4 for v in sout["results"].values())
+
+
+def test_tenant_train_requires_site_and_devices():
+    sched = make_sched()
+    vc = sched.create_tenant(TenantSpec("bob"))
+    session = Session(tenant=vc)
+    h = session.apply(tiny_train("t", steps=2))
+    with pytest.raises(RuntimeError, match="spec.site"):
+        h.wait(60)
+
+
+def test_apply_rejects_non_specs():
+    session = Session(cluster=Cluster(devices=jax.devices()))
+    with pytest.raises(Exception, match="Session.apply"):
+        session.apply(42)
+
+
+def test_session_requires_exactly_one_backend():
+    with pytest.raises(TypeError, match="exactly one backend"):
+        Session()
+    with pytest.raises(TypeError, match="exactly one backend"):
+        Session(cluster=Cluster(devices=jax.devices()),
+                fabric=make_fabric())
