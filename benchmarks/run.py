@@ -17,6 +17,12 @@ Outputs ``name,us_per_call,derived`` CSV rows:
                placement (derived = bytes moved over the links).
   vcluster_* — multi-tenant fair share: dominant-share scheduling vs
                FIFO skew, preemption/resume cost, monitor event lag.
+  scenario_* — production-chaos harness: diurnal replay under site
+               loss / link brown-out; per-tenant SLO scorecards
+               (goodput, p99, steps lost, chargeback).
+
+``--only SUBSTR`` runs only the benches whose name contains SUBSTR
+(e.g. ``--only scenarios`` regenerates just BENCH_scenarios.json).
 
 ``--json PATH`` additionally writes the whole run as one trajectory
 record: every row as an object with its structured extras (``tok_s``,
@@ -36,6 +42,25 @@ import numpy as np
 
 ROWS = []
 JSON_SCHEMA = "repro-bench/v1"
+
+# The documented vocabulary of structured row extras.  Every key a bench
+# passes to ``row(**extra)`` must be registered here — the committed
+# BENCH_*.json files are validated against this set by
+# tests/test_bench_schema.py, so cross-PR tooling can rely on the names.
+KNOWN_EXTRA_KEYS = frozenset({
+    # data movement / placement
+    "bytes", "bytes_moved", "transfer_s", "makespan_s",
+    # throughput
+    "tok_s",
+    # elasticity / preemption
+    "steps_lost", "preemptions", "recoveries",
+    # fair share / monitoring
+    "makespan_ratio", "fifo_skew", "monitor_lag_s", "monitor_events",
+    # chaos scenarios
+    "fairshare_skew", "chaos_applied", "windows", "horizon_s",
+    "offered", "served", "goodput", "slo_pass",
+    "p99_ttft_s", "p99_latency_s", "chargeback_usd",
+})
 
 
 def row(name: str, us_per_call: float, derived: str = "", **extra):
@@ -369,22 +394,81 @@ def bench_vcluster_fairness(fast: bool):
         monitor_lag_s=mon["max_lag_s"], monitor_events=mon["received"])
 
 
+def bench_scenarios(fast: bool):
+    """Production-chaos scenario harness (paper §IV measurement loop).
+
+    Runs ``examples/scenario_chaos.py`` in a subprocess (it forces 8 XLA
+    host devices before jax initializes) and parses its
+    ``SCENARIO_REPORT`` json: three tenants replaying diurnal traffic
+    through the declarative API while a site dies, a link browns out and
+    nodes churn mid-wave.  One summary row carries the fair-share skew
+    and wall time; one row per tenant carries its SLO scorecard —
+    goodput ratio, p99 TTFT/latency, steps lost to preemption and the
+    $-chargeback total.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, os.path.join(root, "examples",
+                                        "scenario_chaos.py")]
+    if fast:
+        cmd.append("--fast")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"scenario chaos bench failed:\n{out.stdout}"
+                           f"\n{out.stderr}")
+    rep = next(json.loads(l.split(" ", 1)[1]) for l in out.stdout.splitlines()
+               if l.startswith("SCENARIO_REPORT "))
+    chaos_applied = sum(1 for c in rep["chaos"] if c.get("applied"))
+    row("scenario_chaos_run", rep["wall_s"] * 1e6,
+        f"skew={rep['fairshare_skew']};chaos={chaos_applied}",
+        fairshare_skew=rep["fairshare_skew"], chaos_applied=chaos_applied,
+        windows=rep["windows"], horizon_s=rep["horizon_s"])
+    for name, g in sorted(rep["tenants"].items()):
+        row(f"scenario_tenant_{name}", g["makespan_s"] * 1e6,
+            f"goodput={g['goodput_ratio']};slo_pass={g['slo_pass']};"
+            f"steps_lost={g['steps_lost']}",
+            offered=g["offered"], served=g["served"],
+            goodput=g["goodput_ratio"], slo_pass=bool(g["slo_pass"]),
+            p99_ttft_s=g["p99_ttft_s"], p99_latency_s=g["p99_latency_s"],
+            steps_lost=g["steps_lost"],
+            chargeback_usd=g["chargeback"]["total"])
+
+
+BENCHES = [
+    ("connect_workflow", lambda fast: bench_connect_workflow(fast)),
+    ("queue_scaling", lambda fast: bench_queue_scaling(fast)),
+    ("ffn_train", lambda fast: bench_ffn_train(fast)),
+    ("inference_scaling", lambda fast: bench_inference_scaling(fast)),
+    ("lm_train", lambda fast: bench_lm_train(fast)),
+    ("serve", lambda fast: bench_serve(fast)),
+    ("elastic_churn", lambda fast: bench_elastic_churn(fast)),
+    ("fabric_placement", lambda fast: bench_fabric_placement(fast)),
+    ("vcluster_fairness", lambda fast: bench_vcluster_fairness(fast)),
+    ("scenarios", lambda fast: bench_scenarios(fast)),
+]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--json", default="",
                     help="also write the rows as a JSON trajectory record")
+    ap.add_argument("--only", default="",
+                    help="run only benches whose name contains this substring")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
-    bench_connect_workflow(args.fast)
-    bench_queue_scaling(args.fast)
-    bench_ffn_train(args.fast)
-    bench_inference_scaling(args.fast)
-    bench_lm_train(args.fast)
-    bench_serve(args.fast)
-    bench_elastic_churn(args.fast)
-    bench_fabric_placement(args.fast)
-    bench_vcluster_fairness(args.fast)
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        fn(args.fast)
     print(f"\n# {len(ROWS)} benchmark rows")
     if args.json:
         with open(args.json, "w") as f:

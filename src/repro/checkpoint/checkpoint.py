@@ -184,12 +184,19 @@ class Checkpointer:
         can still lose the step it picked — on FileNotFound it re-lists and
         retries on whatever is newest then (a newer save has always
         committed before GC collects an older step, so progress is
-        guaranteed)."""
+        guaranteed).
+
+        An EMPTY listing can be transient too: ``list`` walks the store
+        directory-by-directory, so a scan racing save+GC may visit the
+        new step before its manifest commits and the old step after GC
+        removed its manifest — seeing no checkpoint at all while one
+        always exists.  ``None`` is therefore only returned after the
+        full retry budget agrees the store is empty."""
         err: Optional[BaseException] = None
         for _ in range(retries + 1):
             step = self.latest_step()
             if step is None:
-                return None, None
+                continue                     # possibly a racing re-list
             try:
                 manifest = self.store.get_json(
                     f"{self._step_dir(step)}/MANIFEST.json")
@@ -197,4 +204,6 @@ class Checkpointer:
                     {"step": step, **manifest.get("extra", {})}
             except FileNotFoundError as e:   # lost a GC race; re-list
                 err = e
-        raise err
+        if err is not None:
+            raise err
+        return None, None

@@ -95,6 +95,7 @@ class Pod:
     # respawn; `holds_devices` makes lease release idempotent.
     gen: int = 0
     holds_devices: bool = False
+    lease_t0: float = 0.0        # when the current device lease started
 
 
 @dataclass
@@ -209,7 +210,11 @@ class Cluster:
         return take
 
     def _release_pod_locked(self, pod: Pod) -> None:
-        """Return a pod's lease (devices + namespace quota).  Idempotent."""
+        """Return a pod's lease (devices + namespace quota).  Idempotent.
+
+        Bills the lease on the way out: ``lease_device_s/<namespace>``
+        accumulates device-seconds held (allocation -> release), the
+        per-tenant meter $-style chargeback reads (repro.scenarios)."""
         if not pod.holds_devices:
             return
         pod.holds_devices = False
@@ -217,6 +222,9 @@ class Cluster:
         for d in pod.ctx.devices:
             self.leased.discard(d)
         ns.used_devices = max(0, ns.used_devices - len(pod.ctx.devices))
+        held = max(0.0, time.monotonic() - pod.lease_t0)
+        self.metrics.inc(f"lease_device_s/{ns.name}",
+                         held * len(pod.ctx.devices))
 
     # ----------------------------------------------------------------- jobs
     def submit(self, namespace: str, spec: JobSpec) -> Job:
@@ -233,6 +241,7 @@ class Cluster:
                                  metrics=self.metrics, site=self.site)
                     pod = Pod(ctx.pod_id, spec.fn, ctx)
                     pod.holds_devices = bool(devs)
+                    pod.lease_t0 = time.monotonic()
                     pods.append(pod)
             except Exception:
                 for p in pods:           # all-or-nothing: undo partial leases
@@ -329,6 +338,7 @@ class Cluster:
                                      self.metrics, attempt=pod.restarts,
                                      site=self.site)
                     pod.holds_devices = bool(devs)
+                    pod.lease_t0 = time.monotonic()
                     pod.error = None
                     pod.state = PodState.PENDING
                 self._notify_pod("respawned", pod)

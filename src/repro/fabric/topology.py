@@ -24,6 +24,7 @@ while unit tests run with ``time_scale=0`` and only the meters move.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from contextlib import contextmanager
@@ -81,6 +82,9 @@ class Fabric:
         self.time_scale = time_scale
         self.sites: Dict[str, Site] = {}
         self._links: Dict[Tuple[str, str], Link] = {}
+        # original Link per degraded direction, so a restore (explicit or
+        # via restore_site) returns the configured bandwidth exactly
+        self._degraded: Dict[Tuple[str, str], Link] = {}
         self._lock = threading.Lock()
         # in-flight bytes per (link, tenant) — the backlog a tenant-aware
         # placement scorer reads so one tenant's pre-staging cannot
@@ -107,6 +111,11 @@ class Fabric:
                               metrics=self.metrics, site=name)
         else:
             cluster.site = name
+            # adopt the cluster onto the federation's registry so every
+            # site meters into ONE scrape surface (per-tenant device-
+            # lease billing, pod counters) — otherwise a user-provided
+            # cluster's numbers are stranded in its private registry
+            cluster.metrics = self.metrics
         if store is None:
             if store_root is None:
                 import tempfile
@@ -124,6 +133,52 @@ class Fabric:
         self._links[(a, b)] = Link(a, b, gbps, latency_ms / 1e3)
         if symmetric:
             self._links[(b, a)] = Link(b, a, gbps, latency_ms / 1e3)
+
+    def degrade_link(self, a: str, b: str, *, gbps: float,
+                     latency_ms: Optional[float] = None,
+                     symmetric: bool = True) -> None:
+        """Brown-out a link: replace its bandwidth (and optionally its
+        latency) while remembering the configured original, so
+        ``restore_link`` / ``restore_site`` can undo it exactly.  The
+        degraded cost model is live immediately — placement scoring and
+        every subsequent ``transfer`` see the reduced gbps.  Repeated
+        degradations keep the FIRST original (a double brown-out still
+        restores to the configured link)."""
+        if gbps <= 0:
+            raise ValueError(f"degraded gbps must be > 0, got {gbps}")
+        pairs = [(a, b), (b, a)] if symmetric else [(a, b)]
+        with self._lock:
+            for key in pairs:
+                link = self._links.get(key)
+                if link is None:
+                    raise ValueError(f"no link {key[0]!r} -> {key[1]!r}")
+                self._degraded.setdefault(key, link)
+                self._links[key] = dataclasses.replace(
+                    link, gbps=gbps,
+                    latency_s=link.latency_s if latency_ms is None
+                    else latency_ms / 1e3)
+        self.metrics.inc("fabric/link_degradations")
+        self.metrics.inc(f"fabric/link/{a}->{b}/degradations")
+
+    def restore_link(self, a: str, b: str, *, symmetric: bool = True) -> bool:
+        """Return a degraded link to its configured bandwidth/latency.
+        Returns False when the link was not degraded."""
+        restored = False
+        pairs = [(a, b), (b, a)] if symmetric else [(a, b)]
+        with self._lock:
+            for key in pairs:
+                orig = self._degraded.pop(key, None)
+                if orig is not None:
+                    self._links[key] = orig
+                    restored = True
+        if restored:
+            self.metrics.inc("fabric/link_restores")
+        return restored
+
+    def degraded_links(self) -> List[Tuple[str, str]]:
+        """The directions currently running below configured bandwidth."""
+        with self._lock:
+            return sorted(self._degraded)
 
     def link(self, src: str, dst: str) -> Optional[Link]:
         """The link src->dst; None for a same-site (free) move."""
@@ -228,10 +283,16 @@ class Fabric:
         self.metrics.inc("fabric/site_failures")
 
     def restore_site(self, name: str) -> None:
+        """Bring an appliance back: nodes rejoin AND any degraded link
+        touching the site returns to its configured bandwidth (a site
+        restore is a power-cycle — its NICs come back clean)."""
         site = self.sites[name]
         site.up = True
         for d in list(site.cluster.devices):
             site.cluster.join_node(d)
+        for src, dst in self.degraded_links():
+            if name in (src, dst):
+                self.restore_link(src, dst, symmetric=False)
 
     # ------------------------------------------------------------- compute
     def submit(self, namespace: str, spec: JobSpec, *,

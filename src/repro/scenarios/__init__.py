@@ -1,0 +1,25 @@
+"""Production-chaos scenario harness — replay, inject, grade.
+
+The closing argument for the stack (ROADMAP item 5): drive
+production-shaped traffic (``traffic``) through the multi-site,
+multi-tenant fabric while a scheduled failure menu (``chaos``) churns
+the infrastructure underneath, then grade every tenant's SLO
+attainment, goodput and chargeback (``grade``).  ``driver`` ties the
+three together through the declarative ``Session`` API.
+"""
+from repro.scenarios.chaos import ChaosEvent, ChaosInjector, ChaosSchedule
+from repro.scenarios.driver import (BurstPlan, ScenarioResult, ServePlan,
+                                    TrainPlan, run_scenario)
+from repro.scenarios.grade import (SLO, Price, ScenarioSpec, TenantGrade,
+                                   chargeback, grade_table, grade_tenant,
+                                   percentile)
+from repro.scenarios.traffic import (BurstOverlay, DiurnalRate,
+                                     TrafficShape, slice_window)
+
+__all__ = [
+    "BurstOverlay", "BurstPlan", "ChaosEvent", "ChaosInjector",
+    "ChaosSchedule", "DiurnalRate", "Price", "SLO", "ScenarioResult",
+    "ScenarioSpec", "ServePlan", "TenantGrade", "TrafficShape",
+    "TrainPlan", "chargeback", "grade_table", "grade_tenant",
+    "percentile", "run_scenario", "slice_window",
+]

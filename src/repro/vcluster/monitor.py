@@ -57,15 +57,19 @@ class Subscription:
         self.dropped = 0            # events lost to this subscriber's bound
         self.closed = False
 
-    def _push(self, ev: Event) -> None:
+    def _push(self, ev: Event) -> bool:
+        """Deliver one event; returns True iff the bound forced a drop."""
         with self._cond:
             if self.closed:
-                return
+                return False
+            dropped = False
             if len(self._q) >= self._maxlen:
                 self._q.popleft()          # oldest first: keep the window
                 self.dropped += 1
+                dropped = True
             self._q.append(ev)
             self._cond.notify_all()
+            return dropped
 
     def poll(self, timeout: float = 0.0,
              max_events: Optional[int] = None) -> List[Event]:
@@ -113,15 +117,31 @@ class EventBus:
             subs = list(self._subs)
             self.published += 1     # counted under the lock: publishers
             # race from many threads and received==published must hold
-        dropped_before = sum(s.dropped for s in subs)
-        for sub in subs:
-            sub._push(ev)
+        # each _push reports its own drop so the metric stays exact even
+        # when many publisher threads interleave (summing s.dropped
+        # before/after here would double-count concurrent drops)
+        new_drops = sum(1 for sub in subs if sub._push(ev))
         if self.metrics is not None:
             self.metrics.inc("monitor/published")
-            new_drops = sum(s.dropped for s in subs) - dropped_before
             if new_drops:
                 self.metrics.inc("monitor/dropped", new_drops)
         return ev
+
+    def stats(self) -> Dict[str, Any]:
+        """Bus health snapshot: total published plus, per subscriber,
+        its bound, current queue depth, and oldest-drop count — the
+        counters a dashboard shows to prove the lossy-window contract
+        (drops recorded, publishers never blocked)."""
+        with self._lock:
+            subs = list(self._subs)
+        return {
+            "published": self.published,
+            "subscribers": [
+                {"maxlen": s._maxlen, "queued": len(s._q),
+                 "dropped": s.dropped}
+                for s in subs
+            ],
+        }
 
     # ------------------------------------------------------------- watchers
     def attach_cluster(self, cluster, site: str = "") -> None:

@@ -302,6 +302,18 @@ class FairShareScheduler:
             site.cluster.reconcile()
         return placed
 
+    def _stranded(self, tj: TenantJob) -> bool:
+        """A placed job whose site can no longer run it: the whole site
+        is down, or node churn shrank it below the job's device need.
+        ``step()`` only reconciles UP sites, so a drained pod at a dead
+        site would otherwise sit FAILED-under-backoff forever — the
+        cross-layer deadlock the chaos scenarios flush out."""
+        if tj.site is None:
+            return False
+        site = self.fabric.sites[tj.site]
+        return (not site.up or
+                len(site.cluster.online_devices) < tj.spec.devices_per_pod)
+
     def _reap(self) -> None:
         still = []
         for tj in self._running:
@@ -312,8 +324,9 @@ class FairShareScheduler:
                 self.metrics.inc(f"vcluster/done/{tj.tenant}")
                 self.bus.publish("sched", source=tj.tenant, action="done",
                                  job=tj.spec.name, site=tj.site)
-            elif job.terminal and job.preempted:
-                # evicted: requeue the whole job — its fn is expected to
+            elif job.terminal and (job.preempted or self._stranded(tj)):
+                # evicted — or stranded on a dead/shrunken site: requeue
+                # the whole job on the survivors.  Its fn is expected to
                 # be resumable (at-least-once, like the work queue).
                 # Any FAILED-under-backoff sibling pod must be retired
                 # first, or the site reconciler would respawn it while

@@ -1,0 +1,72 @@
+"""The benchmark JSON contract: every committed BENCH_*.json (and any
+row the harness emits) follows the documented ``repro-bench/v1`` shape,
+so cross-PR tooling can track throughput / SLO numbers by key without
+re-parsing ``derived`` strings."""
+import json
+import numbers
+import pathlib
+
+import pytest
+
+from benchmarks import run as bench
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def assert_valid_row(r):
+    assert isinstance(r.get("name"), str) and r["name"]
+    assert isinstance(r.get("us_per_call"), numbers.Real)
+    assert r["us_per_call"] >= 0
+    assert isinstance(r.get("derived"), str)
+    extras = set(r) - {"name", "us_per_call", "derived"}
+    unknown = extras - bench.KNOWN_EXTRA_KEYS
+    assert not unknown, \
+        f"row {r['name']!r} carries undocumented extras {sorted(unknown)}; " \
+        f"register them in benchmarks.run.KNOWN_EXTRA_KEYS"
+    for k in extras:
+        assert isinstance(r[k], (numbers.Real, bool)), \
+            f"extra {k}={r[k]!r} must be numeric or bool"
+
+
+def test_row_helper_emits_documented_shape():
+    before = list(bench.ROWS)
+    try:
+        bench.ROWS.clear()
+        bench.row("x_probe", 12.34, "detail=1", tok_s=5.0, steps_lost=0)
+        (r,) = bench.ROWS
+        assert r["name"] == "x_probe" and r["us_per_call"] == 12.3
+        assert_valid_row(r)
+    finally:
+        bench.ROWS[:] = before
+
+
+def committed_bench_files():
+    return sorted(ROOT.glob("BENCH_*.json"))
+
+
+def test_scenario_bench_is_committed():
+    """ISSUE 6 acceptance: BENCH_scenarios.json exists with >= 1 row."""
+    path = ROOT / "BENCH_scenarios.json"
+    assert path.exists(), "BENCH_scenarios.json must be committed"
+    doc = json.loads(path.read_text())
+    names = [r["name"] for r in doc["rows"]]
+    assert "scenario_chaos_run" in names
+    tenant_rows = [r for r in doc["rows"]
+                   if r["name"].startswith("scenario_tenant_")]
+    assert tenant_rows, "per-tenant SLO scorecard rows missing"
+    for r in tenant_rows:
+        assert {"goodput", "slo_pass", "p99_ttft_s", "p99_latency_s",
+                "steps_lost", "chargeback_usd"} <= set(r)
+
+
+@pytest.mark.parametrize("path", committed_bench_files(),
+                         ids=lambda p: p.name)
+def test_committed_bench_json_validates(path):
+    doc = json.loads(path.read_text())
+    assert doc.get("schema") == bench.JSON_SCHEMA
+    assert isinstance(doc.get("created_unix"), numbers.Real)
+    assert isinstance(doc.get("fast"), bool)
+    rows = doc.get("rows")
+    assert isinstance(rows, list) and len(rows) >= 1
+    for r in rows:
+        assert_valid_row(r)

@@ -90,6 +90,89 @@ def test_fail_site_drains_deviceless_pods(tmp_path):
     release.set()
 
 
+def test_degrade_link_scales_transfer_cost(tmp_path):
+    """A brown-out is live immediately: transfer_s reflects the reduced
+    bandwidth in both directions, and restore returns the CONFIGURED
+    link exactly."""
+    fabric = mk_fabric(tmp_path)
+    nbytes = 125_000_000                       # 1s at the configured 1 Gbps
+    base = fabric.transfer_s("s0", "s1", nbytes)
+    assert base == pytest.approx(1.01)
+    fabric.degrade_link("s0", "s1", gbps=0.1)
+    assert fabric.transfer_s("s0", "s1", nbytes) == pytest.approx(10.01)
+    assert fabric.transfer_s("s1", "s0", nbytes) == pytest.approx(10.01)
+    assert fabric.degraded_links() == [("s0", "s1"), ("s1", "s0")]
+    assert fabric.metrics.series("fabric/link_degradations").total == 1
+    assert fabric.restore_link("s0", "s1") is True
+    assert fabric.transfer_s("s0", "s1", nbytes) == pytest.approx(base)
+    assert fabric.degraded_links() == []
+    assert fabric.restore_link("s0", "s1") is False    # nothing degraded
+
+
+def test_degrade_link_latency_override_and_validation(tmp_path):
+    fabric = mk_fabric(tmp_path)
+    fabric.degrade_link("s0", "s1", gbps=1.0, latency_ms=500.0)
+    assert fabric.transfer_s("s0", "s1", 0) == pytest.approx(0.5)
+    fabric.restore_link("s0", "s1")
+    assert fabric.transfer_s("s0", "s1", 0) == pytest.approx(0.01)
+    with pytest.raises(ValueError, match="gbps"):
+        fabric.degrade_link("s0", "s1", gbps=0.0)
+    with pytest.raises(ValueError, match="no link"):
+        fabric.degrade_link("s0", "nope", gbps=0.5)
+    assert fabric.degraded_links() == []       # failed calls left no residue
+
+
+def test_double_degrade_restores_first_original(tmp_path):
+    fabric = mk_fabric(tmp_path)
+    base = fabric.transfer_s("s0", "s1", 125_000_000)
+    fabric.degrade_link("s0", "s1", gbps=0.5)
+    fabric.degrade_link("s0", "s1", gbps=0.05)  # brown-out worsens
+    assert fabric.transfer_s("s0", "s1", 125_000_000) == \
+        pytest.approx(20.01)
+    fabric.restore_link("s0", "s1")
+    # one restore undoes the stack: back to the CONFIGURED gbps
+    assert fabric.transfer_s("s0", "s1", 125_000_000) == \
+        pytest.approx(base)
+
+
+def test_restore_site_clears_degraded_links(tmp_path):
+    """A site restore is a power-cycle: every degraded link touching the
+    site comes back at configured bandwidth."""
+    fabric = mk_fabric(tmp_path)
+    base = fabric.transfer_s("s0", "s1", 125_000_000)
+    fabric.degrade_link("s0", "s1", gbps=0.1)
+    fabric.fail_site("s1")
+    fabric.restore_site("s1")
+    assert fabric.degraded_links() == []
+    assert fabric.transfer_s("s0", "s1", 125_000_000) == \
+        pytest.approx(base)
+
+
+def test_planner_routes_around_browned_out_link(tmp_path):
+    """The §IV question under chaos: with the data home unable to host,
+    a brown-out on one staging route must shift placement to the
+    healthy route — and the restore must make both routes equal again."""
+    fabric = Fabric()
+    fabric.add_site("home", devices=[0], store_root=str(tmp_path / "h"))
+    fabric.add_site("s1", devices=[0, 1], store_root=str(tmp_path / "s1"))
+    fabric.add_site("s2", devices=[0, 1], store_root=str(tmp_path / "s2"))
+    fabric.connect("home", "s1", gbps=10.0, latency_ms=1.0)
+    fabric.connect("home", "s2", gbps=10.0, latency_ms=1.0)
+    fed = FederatedStore(fabric)
+    fed.put("d/x", b"z" * 10_000_000, "home")
+    planner = PlacementPlanner(fed)
+    # the step needs 2 devices: home can't host, s1/s2 tie on cost
+    scores0 = planner.place(["d/x"], devices=2).scores
+    assert scores0["s1"] == pytest.approx(scores0["s2"])
+    fabric.degrade_link("home", "s1", gbps=0.001)
+    p = planner.place(["d/x"], devices=2)
+    assert p.site == "s2", f"placed over the browned-out link: {p.scores}"
+    assert p.scores["s1"] > p.scores["s2"]
+    fabric.restore_link("home", "s1")
+    scores2 = planner.place(["d/x"], devices=2).scores
+    assert scores2["s1"] == pytest.approx(scores2["s2"])
+
+
 # ---------------------------------------------------------- federated store
 
 def test_federated_namespace_and_replicate(tmp_path):

@@ -94,6 +94,38 @@ def test_placement_never_lands_on_dead_or_empty_site(scenario):
 
 
 @settings(max_examples=60, deadline=None)
+@given(scenario=scenarios(), factor=st.floats(min_value=2.0,
+                                              max_value=100.0))
+def test_brown_out_never_cheapens_and_restores_exactly(scenario, factor):
+    """Chaos-link invariant: degrading links can only make placement
+    scores worse (staging time is monotone in bandwidth), and restoring
+    returns every score to its baseline bit for bit."""
+    names, devs, up, links, keys, devices = scenario
+    if not links:
+        return
+    root = tempfile.mkdtemp(prefix="placement-prop-")
+    try:
+        fabric, fed = build(names, devs, up, links, keys, root)
+        planner = PlacementPlanner(fed)
+        inputs = [k for k, *_ in keys]
+        sites = [fabric.sites[s] for s in names if up[s]]
+        before = {s.name: planner.score(inputs, s) for s in sites}
+        for a, b, gbps in links:
+            fabric.degrade_link(a, b, gbps=gbps / factor)
+        degraded = {s.name: planner.score(inputs, s) for s in sites}
+        for name in degraded:
+            assert degraded[name] >= before[name] - 1e-9, \
+                f"brown-out cheapened {name}: {before} -> {degraded}"
+        for a, b, _ in links:
+            assert fabric.restore_link(a, b) is True
+        assert fabric.degraded_links() == []
+        after = {s.name: planner.score(inputs, s) for s in sites}
+        assert after == before
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+@settings(max_examples=60, deadline=None)
 @given(scenario=scenarios())
 def test_metered_bytes_equal_bytes_missing(scenario):
     """fabric/bytes_moved's delta for a pre-stage == the placement's

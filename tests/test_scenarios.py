@@ -1,0 +1,375 @@
+"""Production-chaos scenario harness: traffic-generator determinism,
+chaos-schedule validation, SLO grading, and the slow end-to-end chaos
+regression (site kill + link brown-out mid-run, graded tenants)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.scenarios import (SLO, BurstOverlay, ChaosEvent, ChaosInjector,
+                             ChaosSchedule, DiurnalRate, Price, ScenarioSpec,
+                             ServePlan, TrafficShape, TrainPlan, chargeback,
+                             grade_table, grade_tenant, run_scenario,
+                             slice_window)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:              # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------- traffic generators
+
+def check_same_seed_same_trace(shape):
+    """The replay contract: one seed == one trace, bit for bit — arrivals,
+    lengths and the fully rendered request list."""
+    horizon = shape.rate.period_s
+    a1, a2 = shape.arrivals(horizon), shape.arrivals(horizon)
+    assert np.array_equal(a1, a2)
+    assert np.array_equal(shape.prompt_lengths(64), shape.prompt_lengths(64))
+    assert np.array_equal(shape.gen_lengths(64), shape.gen_lengths(64))
+    r1 = shape.requests(horizon, vocab_size=128)
+    r2 = shape.requests(horizon, vocab_size=128)
+    assert r1 == r2
+
+
+def check_arrival_count_tracks_mean_rate(shape):
+    """Over one full diurnal period the Poisson count concentrates around
+    mean_rps * period (6-sigma + slack tolerance, so it never flakes)."""
+    horizon = shape.rate.period_s
+    arrivals = shape.arrivals(horizon)
+    assert all(0.0 <= t < horizon for t in arrivals)
+    assert list(arrivals) == sorted(arrivals)
+    expected = shape.mean_rps() * horizon
+    tol = 6.0 * np.sqrt(expected) + 10.0
+    assert abs(len(arrivals) - expected) <= tol, \
+        f"{len(arrivals)} arrivals vs expected {expected:.1f} (tol {tol:.1f})"
+
+
+def check_lengths_always_in_bounds(shape, n):
+    """Heavy tails are clamped: Zipf prompts in [1, max_prompt_len],
+    lognormal gen lengths in [1, max_new_tokens] — never 0, never over."""
+    p = shape.prompt_lengths(n)
+    g = shape.gen_lengths(n)
+    assert p.min() >= 1 and p.max() <= shape.max_prompt_len
+    assert g.min() >= 1 and g.max() <= shape.max_new_tokens
+    for r in shape.requests(shape.rate.period_s, vocab_size=64):
+        assert 1 <= len(r["prompt"]) <= shape.max_prompt_len
+        assert 1 <= r["max_new_tokens"] <= shape.max_new_tokens
+        assert all(0 <= tok < 64 for tok in r["prompt"])
+
+
+def fixed_shape(seed=0, max_prompt_len=24, max_new_tokens=12):
+    """Deterministic fallback when hypothesis is absent: still exercises
+    every traffic invariant, just on fixed parameters."""
+    return TrafficShape(
+        name="t",
+        rate=DiurnalRate(base_rps=0.8, peak_rps=3.2, period_s=120.0,
+                         phase_s=30.0),
+        zipf_a=1.6, max_prompt_len=max_prompt_len,
+        max_new_tokens=max_new_tokens, seed=seed)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 12345])
+def test_traffic_invariants_fixed_seeds(seed):
+    shape = fixed_shape(seed=seed)
+    check_same_seed_same_trace(shape)
+    check_arrival_count_tracks_mean_rate(shape)
+    check_lengths_always_in_bounds(shape, 256)
+
+
+def test_different_seed_different_trace():
+    a = fixed_shape(seed=1).arrivals(120.0)
+    b = fixed_shape(seed=2).arrivals(120.0)
+    assert not np.array_equal(a, b)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def shapes(draw):
+        """Burst-free diurnal shapes with rates high enough that the
+        mean-count property has statistical teeth."""
+        base = draw(st.floats(min_value=0.5, max_value=5.0))
+        peak = draw(st.floats(min_value=0.5, max_value=5.0))
+        period = draw(st.floats(min_value=50.0, max_value=200.0))
+        return TrafficShape(
+            name="t",
+            rate=DiurnalRate(base_rps=min(base, peak),
+                             peak_rps=max(base, peak),
+                             period_s=period,
+                             phase_s=draw(st.floats(min_value=0.0,
+                                                    max_value=period))),
+            zipf_a=draw(st.floats(min_value=1.2, max_value=3.0)),
+            max_prompt_len=draw(st.integers(min_value=1, max_value=64)),
+            max_new_tokens=draw(st.integers(min_value=1, max_value=64)),
+            seed=draw(st.integers(min_value=0, max_value=2**20)))
+
+    @settings(max_examples=60, deadline=None)
+    @given(shape=shapes())
+    def test_same_seed_same_trace(shape):
+        check_same_seed_same_trace(shape)
+
+    @settings(max_examples=60, deadline=None)
+    @given(shape=shapes())
+    def test_arrival_count_tracks_mean_rate(shape):
+        check_arrival_count_tracks_mean_rate(shape)
+
+    @settings(max_examples=60, deadline=None)
+    @given(shape=shapes(), n=st.integers(min_value=1, max_value=256))
+    def test_lengths_always_in_bounds(shape, n):
+        check_lengths_always_in_bounds(shape, n)
+
+
+def test_burst_overlay_raises_mean_rate():
+    base = DiurnalRate(base_rps=1.0, peak_rps=1.0, period_s=100.0)
+    quiet = TrafficShape(name="q", rate=base, seed=3)
+    bursty = TrafficShape(name="b", rate=base, seed=3,
+                          bursts=BurstOverlay(rate_per_s=0.05, extra_rps=4.0,
+                                              duration_s=10.0))
+    assert bursty.mean_rps() > quiet.mean_rps()
+    assert bursty.max_rps() >= quiet.max_rps() + 4.0
+
+
+def test_slice_window_partitions_trace():
+    shape = TrafficShape(
+        name="w", rate=DiurnalRate(base_rps=2.0, peak_rps=2.0,
+                                   period_s=60.0), seed=1)
+    reqs = shape.requests(60.0, vocab_size=32)
+    parts = [slice_window(reqs, w * 20.0, (w + 1) * 20.0) for w in range(3)]
+    assert sum(len(p) for p in parts) == len(reqs)
+    assert [r["id"] for p in parts for r in p] == [r["id"] for r in reqs]
+
+
+# ------------------------------------------------------- chaos validation
+
+def check_alternating_failures_validate(events):
+    sched = ChaosSchedule(events)
+    assert len(sched.events) == len(events)
+    # ...and injecting a second failure inside any open window is rejected
+    kill = next(e for e in sched.events if e.kind == "site-kill")
+    dup = ChaosEvent(at_s=kill.at_s + 0.5, kind="site-kill", site=kill.site)
+    with pytest.raises(ValueError, match="overlapping"):
+        ChaosSchedule(events + [dup])
+    # ...unless overlap is explicitly permitted
+    ChaosSchedule(events + [dup], allow_overlap=True)
+
+
+def test_sequential_failures_validate():
+    """kill -> restore -> kill again on one site is a well-formed
+    schedule; a second kill inside the open window is not."""
+    events = []
+    for site, t0 in (("s0", 0.0), ("s1", 5.5)):
+        for k in range(3):
+            events.append(ChaosEvent(at_s=t0 + 2 * k, kind="site-kill",
+                                     site=site))
+            events.append(ChaosEvent(at_s=t0 + 2 * k + 1,
+                                     kind="site-restore", site=site))
+    check_alternating_failures_validate(events)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def alternating_schedules(draw):
+        """Well-formed schedules: per target, strictly alternating
+        fail -> restore pairs (any number, any start time)."""
+        events = []
+        for i in range(draw(st.integers(min_value=1, max_value=3))):
+            site = f"s{i}"
+            t0 = draw(st.floats(min_value=0.0, max_value=100.0))
+            for k in range(draw(st.integers(min_value=1, max_value=3))):
+                events.append(ChaosEvent(at_s=t0 + 2 * k, kind="site-kill",
+                                         site=site))
+                events.append(ChaosEvent(at_s=t0 + 2 * k + 1,
+                                         kind="site-restore", site=site))
+        return events
+
+    @settings(max_examples=60, deadline=None)
+    @given(events=alternating_schedules())
+    def test_alternating_failures_always_validate(events):
+        check_alternating_failures_validate(events)
+
+
+def test_overlap_rules_per_target():
+    kill = ChaosEvent(at_s=10, kind="site-kill", site="a")
+    # distinct sites may fail concurrently
+    ChaosSchedule([kill, ChaosEvent(at_s=11, kind="site-kill", site="b")])
+    # node-fail while the same site is killed is an overlap...
+    with pytest.raises(ValueError, match="overlapping"):
+        ChaosSchedule([kill, ChaosEvent(at_s=11, kind="node-fail",
+                                        site="a")])
+    # ...but a link brown-out is a different target even if it names "a"
+    ChaosSchedule([kill, ChaosEvent(at_s=11, kind="link-degrade",
+                                    link=("a", "b"), gbps=0.1)])
+    # double brown-out of one link (either endpoint order) is an overlap
+    with pytest.raises(ValueError, match="overlapping"):
+        ChaosSchedule([
+            ChaosEvent(at_s=1, kind="link-degrade", link=("a", "b"),
+                       gbps=0.1),
+            ChaosEvent(at_s=2, kind="link-degrade", link=("b", "a"),
+                       gbps=0.2)])
+
+
+def test_event_field_validation():
+    with pytest.raises(ValueError, match="unknown chaos kind"):
+        ChaosEvent(at_s=0, kind="meteor", site="a")
+    with pytest.raises(ValueError, match="at_s"):
+        ChaosEvent(at_s=-1, kind="site-kill", site="a")
+    with pytest.raises(ValueError, match="needs site"):
+        ChaosEvent(at_s=0, kind="node-fail")
+    with pytest.raises(ValueError, match="needs link"):
+        ChaosEvent(at_s=0, kind="link-degrade", gbps=1.0)
+    with pytest.raises(ValueError, match="gbps"):
+        ChaosEvent(at_s=0, kind="link-degrade", link=("a", "b"))
+
+
+def test_injector_fires_each_event_exactly_once():
+    from repro.fabric import Fabric
+    fabric = Fabric()
+    fabric.add_site("a", devices=[0, 1])
+    fabric.add_site("b", devices=[0])
+    fabric.connect("a", "b", gbps=1.0, latency_ms=1.0)
+    inj = ChaosInjector(fabric, ChaosSchedule([
+        ChaosEvent(at_s=5, kind="node-fail", site="a"),
+        ChaosEvent(at_s=10, kind="site-kill", site="b"),
+        ChaosEvent(at_s=20, kind="node-join", site="a"),
+        ChaosEvent(at_s=30, kind="site-restore", site="b"),
+    ]))
+    assert [r["kind"] for r in inj.fire_due(10)] == ["node-fail",
+                                                     "site-kill"]
+    assert len(fabric.sites["a"].cluster.online_devices) == 1
+    assert not fabric.sites["b"].up
+    assert inj.fire_due(10) == []            # idempotent
+    late = inj.fire_due(1e9)
+    assert [r["kind"] for r in late] == ["node-join", "site-restore"]
+    assert all(r["applied"] for r in inj.fired)
+    assert len(fabric.sites["a"].cluster.online_devices) == 2
+    assert fabric.sites["b"].up
+
+
+# ---------------------------------------------------------------- grading
+
+def test_grade_tenant_verdicts_and_chargeback():
+    g = grade_tenant(
+        "chat", SLO(p99_ttft_s=1.0, p99_latency_s=2.0, min_goodput=0.9),
+        offered=100, served=95, ttft_s=[0.1] * 90 + [5.0] * 10,
+        latency_s=[0.2] * 100, horizon_s=100.0,
+        price=Price(per_gb=1.0, per_device_s=0.01),
+        bytes_moved=2e9, device_s=50.0)
+    assert g.rejected == 5
+    assert g.goodput_ratio == pytest.approx(0.95)
+    assert g.verdicts == {"p99_ttft": False, "p99_latency": True,
+                          "goodput": True}
+    assert not g.slo_pass                      # one verdict fails => fail
+    assert g.chargeback["gb_moved"] == pytest.approx(2.0)
+    assert g.chargeback["total"] == pytest.approx(2.0 + 0.5)
+    assert "chat" in grade_table([g])
+    row = g.to_json()
+    assert row["offered"] == 100 and row["slo_pass"] is False
+
+
+def test_grade_rejects_overcounted_served():
+    with pytest.raises(ValueError, match="served"):
+        grade_tenant("t", SLO(), offered=1, served=2, horizon_s=10.0)
+
+
+def test_chargeback_zero_usage_is_free():
+    bill = chargeback(Price(), bytes_moved=0.0, device_s=0.0)
+    assert bill["total"] == 0.0
+
+
+# ------------------------------------------- end-to-end chaos regression
+
+@pytest.mark.slow
+def test_scenario_survives_site_kill_and_preemption():
+    """Tiny diurnal run through the declarative surface: the serving
+    site is killed mid-wave and a gated priority burst preempts the
+    trainer exactly once.  The run must terminate, every tenant must be
+    graded with nothing silently dropped, and the elastic bound must
+    hold strictly (steps_lost <= ckpt_every)."""
+    import jax
+
+    from repro.api import ServeJob, TrainJob
+    from repro.core.orchestrator import Cluster, JobSpec
+    from repro.fabric import Fabric, FederatedStore
+    from repro.vcluster import FairShareScheduler, TenantSpec
+
+    fabric = Fabric()
+    fabric.add_site("gpu", cluster=Cluster(devices=[jax.devices()[0]]))
+    fabric.add_site("edge", devices=[0, 1])
+    fabric.add_site("hub", devices=[0])
+    fabric.connect("gpu", "edge", gbps=10.0, latency_ms=1.0)
+    fabric.connect("gpu", "hub", gbps=1.0, latency_ms=5.0)
+    fabric.connect("edge", "hub", gbps=1.0, latency_ms=5.0)
+    fed = FederatedStore(fabric)
+    sched = FairShareScheduler(fed=fed, reconcile_s=0.02,
+                               preempt_grace_s=60.0)
+    sched.create_tenant(TenantSpec("research", priority=0))
+    sched.create_tenant(TenantSpec("chat", priority=5))
+    surge = sched.create_tenant(TenantSpec("surge", priority=10,
+                                           preemptible=False))
+
+    horizon, windows, steps, ckpt_every = 120.0, 3, 12, 2
+    spec = ScenarioSpec(
+        name="e2e-chaos", horizon_s=horizon, windows=windows,
+        slos={"chat": SLO(p99_ttft_s=60.0, p99_latency_s=120.0,
+                          min_goodput=0.5)})
+    serve = {"chat": ServePlan(
+        shape=TrafficShape(
+            name="chat",
+            rate=DiurnalRate(base_rps=0.05, peak_rps=0.15,
+                             period_s=horizon),
+            zipf_a=1.7, max_prompt_len=16, gen_mu=1.3, gen_sigma=0.5,
+            max_new_tokens=8, seed=5),
+        manifest=ServeJob(name="chat", slots=2, prompt_len=16,
+                          max_new_tokens=8,
+                          lease_timeout=60.0).to_manifest())}
+    train = {"research": TrainPlan(manifest=TrainJob(
+        name="t", steps=steps, seq_len=32, global_batch=4,
+        base_shape=(1, 1), max_data=1, ckpt_every=ckpt_every, log_every=4,
+        rejoin_timeout_s=300.0, verbose=False, site="gpu", devices=1,
+        min_devices=0,
+        optimizer={"warmup_steps": 2, "decay_steps": 100}).to_manifest())}
+    chaos = ChaosSchedule([
+        ChaosEvent(at_s=50.0, kind="site-kill", site="edge"),
+        ChaosEvent(at_s=50.0, kind="link-degrade", link=("gpu", "hub"),
+                   gbps=0.05),
+        ChaosEvent(at_s=100.0, kind="link-restore", link=("gpu", "hub")),
+        ChaosEvent(at_s=110.0, kind="site-restore", site="edge"),
+    ])
+
+    # deterministic single preemption: the burst fires only once the
+    # trainer has taken >= 3 steps, so one checkpoint window is at risk
+    def fire_burst():
+        while fabric.metrics.series("elastic/step").last < 3:
+            time.sleep(0.005)
+        surge.submit(JobSpec("burst", lambda ctx: time.sleep(0.3) or "ok",
+                             devices_per_pod=1), site="gpu").wait(120)
+
+    th = threading.Thread(target=fire_burst, daemon=True)
+    with sched:
+        th.start()
+        result = run_scenario(sched, spec, serve=serve, train=train,
+                              chaos=chaos)
+        th.join(timeout=120)
+
+    assert set(result.grades) == {"chat", "research"}
+    g = result.grades["chat"]
+    assert g.served + g.rejected == g.offered > 0
+    assert set(g.verdicts) == {"p99_ttft", "p99_latency", "goodput"}
+    applied = {(r["kind"], r.get("site") or tuple(r.get("link") or ()))
+               for r in result.chaos_fired if r["applied"]}
+    assert {("site-kill", "edge"), ("link-degrade", ("gpu", "hub")),
+            ("link-restore", ("gpu", "hub")),
+            ("site-restore", "edge")} <= applied
+    # the preempted trainer resumed from its checkpoint and finished
+    out = result.train_results["research"]
+    assert sorted(out["loss_by_step"]) == list(range(steps))
+    rep = out["report"]
+    assert "preempted" in [s.outcome for s in rep.segments], \
+        "gated burst must preempt the trainer"
+    assert fabric.metrics.series("elastic/preemptions").total >= 1
+    r = result.grades["research"]
+    assert r.steps_lost <= ckpt_every, \
+        f"lost {r.steps_lost} steps > ckpt_every={ckpt_every}"

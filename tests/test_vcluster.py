@@ -456,6 +456,68 @@ def test_event_bus_bounded_overflow_drops_oldest():
     assert bus.published == 11
 
 
+def test_event_bus_slow_subscriber_at_scenario_scale():
+    """A dashboard that stops polling must not stall the platform: many
+    concurrent publishers push scenario-scale traffic past one stuck
+    subscriber.  Publishers stay unblocked, the oldest events drop and
+    are counted, and ``stats()`` exposes the loss for the report card."""
+    from repro.core.metrics import Registry
+    reg = Registry()
+    bus = EventBus(metrics=reg)
+    stuck = bus.subscribe(maxlen=64)         # never polled during the storm
+    healthy = bus.subscribe(maxlen=100_000)
+    n_threads, per_thread = 4, 2000
+
+    def blast(k):
+        for i in range(per_thread):
+            bus.publish("sched", source=f"t{k}", i=i)
+
+    threads = [threading.Thread(target=blast, args=(k,))
+               for k in range(n_threads)]
+    t0 = time.monotonic()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    wall = time.monotonic() - t0
+    total = n_threads * per_thread
+    assert wall < 10.0, f"publishers blocked by a stuck subscriber ({wall}s)"
+    assert bus.published == total
+    # the stuck subscriber kept only its newest window, loss on record
+    assert stuck.dropped == total - 64
+    assert len(stuck.poll(0)) == 64
+    assert len(healthy.poll(0)) == total and healthy.dropped == 0
+    st = bus.stats()
+    assert st["published"] == total
+    by_len = {s["maxlen"]: s for s in st["subscribers"]}
+    assert by_len[64]["dropped"] == total - 64
+    assert by_len[64]["queued"] == 0         # drained just above
+    assert reg.series("monitor/dropped").total == total - 64
+    stuck.close(), healthy.close()
+
+
+def test_stranded_job_requeues_off_dead_site():
+    """Whole-site loss mid-run: a placed job whose site dies must not sit
+    failed forever (step() only reconciles UP sites) — the scheduler
+    retires the stranded pods and requeues the job onto a survivor."""
+    fabric = mk_fabric((1, 1))
+    sched = FairShareScheduler(fabric, reconcile_s=0.02)
+    vc = sched.create_tenant(TenantSpec("a"))
+    tj = vc.submit(JobSpec("j", timed_fn(0.25), devices_per_pod=1,
+                           backoff_limit=0))
+    sched.step()
+    assert tj.state == "running"
+    doomed = tj.site
+    survivor = ({"s0", "s1"} - {doomed}).pop()
+    fabric.fail_site(doomed)
+    with sched:
+        tj.wait(30)
+    assert tj.state == "done"
+    assert tj.site == survivor
+    assert tj.preemptions == 1               # the requeue was counted
+    assert tj.results() == ["ok"]
+
+
 def test_bus_carries_node_pod_and_transfer_events():
     fabric = mk_fabric((2, 2))
     bus = EventBus()
