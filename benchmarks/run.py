@@ -12,6 +12,9 @@ Outputs ``name,us_per_call,derived`` CSV rows:
                (derived = voxels/s; speedup printed vs 1 worker).
   lm_train_* — LM substrate: one sharded train step on the smoke config
                (derived = tokens/s).
+  train_*    — device-resident hot loop: per-step dispatch vs chunked
+               lax.scan dispatch on the elastic trainer (derived =
+               tokens/s; extras = host syncs/step, time-to-first-step).
   serve_*    — serving: prefill latency + decode steps/s.
   fabric_*   — multi-site federation: locality-aware vs data-blind
                placement (derived = bytes moved over the links).
@@ -52,6 +55,8 @@ KNOWN_EXTRA_KEYS = frozenset({
     "bytes", "bytes_moved", "transfer_s", "makespan_s",
     # throughput
     "tok_s",
+    # hot-loop dispatch (train_* rows)
+    "host_syncs_per_step", "t_first_s", "device_steps",
     # elasticity / preemption
     "steps_lost", "preemptions", "recoveries",
     # fair share / monitoring
@@ -209,6 +214,59 @@ def bench_lm_train(fast: bool):
         jax.block_until_ready(m["loss"])
         dt = (time.perf_counter() - t0) / n
     row("lm_train_step_smoke", dt * 1e6, f"tokens_s={4 * 128 / dt:.0f}")
+
+
+def bench_train_hot_loop(fast: bool):
+    """Device-resident hot loop: per-step vs chunked (lax.scan) dispatch.
+
+    Runs the SAME elastic training job twice — ``device_steps=1`` (one
+    host dispatch + loss bookkeeping per optimizer step) and
+    ``device_steps=K`` (one dispatch per K steps, losses flushed in bulk
+    at chunk boundaries, batches prefetched by a background thread) —
+    and records the trajectory numbers the refactor is about: useful
+    tokens/s, host round-trips per optimizer step (O(1) vs O(1/K)), and
+    time-to-first-step (restore + compile + first dispatch; the chunked
+    run compiles a K-step scan, so its t_first is the cost side of the
+    trade).  Losses are bit-identical between the two runs (pinned by
+    tests/test_train_hot_loop.py), so this is pure dispatch overhead.
+    """
+    import tempfile as _tf
+
+    from repro.configs import registry
+    from repro.configs.base import OptimizerConfig
+    from repro.core.orchestrator import Cluster
+    from repro.data.objectstore import ObjectStore
+    from repro.elastic import ElasticTrainer, ElasticTrainSpec
+
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    par = registry.get_parallel("phi4-mini-3.8b")
+    steps = 16 if fast else 48
+    K = 4
+
+    def run(device_steps: int):
+        spec = ElasticTrainSpec(
+            cfg, par, OptimizerConfig(warmup_steps=2, decay_steps=100),
+            steps=steps, seq_len=64, global_batch=8, base_shape=(1, 1),
+            max_data=1, ckpt_every=0, log_every=0, verbose=False,
+            device_steps=device_steps)
+        with _tf.TemporaryDirectory() as d:
+            trainer = ElasticTrainer(Cluster(devices=jax.devices()), spec,
+                                     store=ObjectStore(d))
+            out = trainer.run()
+        rep = out["report"]
+        assert len(out["losses"]) == steps
+        return rep
+
+    base = run(1)
+    for tag, rep in (("per_step", base), (f"chunked_k{K}", run(K))):
+        row(f"train_{tag}", rep.total_wall_s / steps * 1e6,
+            f"tok_s={rep.tokens_per_s:.0f};"
+            f"syncs_per_step={rep.host_syncs_per_step:.2f};"
+            f"t_first_s={rep.t_first_s:.2f}",
+            tok_s=round(rep.tokens_per_s, 1),
+            host_syncs_per_step=round(rep.host_syncs_per_step, 4),
+            t_first_s=round(rep.t_first_s, 3),
+            device_steps=1 if tag == "per_step" else K)
 
 
 def bench_serve(fast: bool):
@@ -448,6 +506,7 @@ BENCHES = [
     ("ffn_train", lambda fast: bench_ffn_train(fast)),
     ("inference_scaling", lambda fast: bench_inference_scaling(fast)),
     ("lm_train", lambda fast: bench_lm_train(fast)),
+    ("train_hot_loop", lambda fast: bench_train_hot_loop(fast)),
     ("serve", lambda fast: bench_serve(fast)),
     ("elastic_churn", lambda fast: bench_elastic_churn(fast)),
     ("fabric_placement", lambda fast: bench_fabric_placement(fast)),

@@ -239,6 +239,10 @@ class TrainJob(WorkloadResource):
     ckpt_every: int = 0
     keep: Optional[int] = 2
     log_every: int = 10
+    # optimizer steps fused into ONE device dispatch (lax.scan hot loop);
+    # ckpt/log cadences snap UP to multiples, preemption latency is
+    # bounded by one chunk (see repro.elastic.ElasticTrainSpec)
+    device_steps: int = 1
     fail_at: int = -1                   # inject ONE crash at this step
     seed: int = 0
     data_seed: int = 17
@@ -267,6 +271,8 @@ class TrainJob(WorkloadResource):
                  "must be two positive ints (data, model)",
                  "spec.base_shape")
         _require(self.ckpt_every >= 0, "must be >= 0", "spec.ckpt_every")
+        _require(self.device_steps >= 1, "must be >= 1",
+                 "spec.device_steps")
         _require(self.devices is None or self.devices >= 1,
                  "must be >= 1 when set", "spec.devices")
 

@@ -75,7 +75,8 @@ def elastic_spec(job: TrainJob, *, namespace: Optional[str] = None):
         cfg, par, ocfg, steps=job.steps, seq_len=job.seq_len,
         global_batch=job.global_batch, base_shape=tuple(job.base_shape),
         max_data=job.max_data, name=job.name, ckpt_every=job.ckpt_every,
-        keep=job.keep, log_every=job.log_every, seed=job.seed,
+        keep=job.keep, log_every=job.log_every,
+        device_steps=job.device_steps, seed=job.seed,
         data_seed=job.data_seed, fail_at=job.fail_at,
         rejoin_timeout_s=job.rejoin_timeout_s, verbose=job.verbose, **kw)
 

@@ -45,6 +45,24 @@ class TokenPipeline:
             return {k: jax.numpy.asarray(v) for k, v in host.items()}
         return {k: jax.device_put(v, self.sharding) for k, v in host.items()}
 
+    def chunk_host(self, start: int, device_steps: int) -> dict:
+        """Batches ``start .. start+device_steps-1`` stacked (K, B, S) on the
+        host — the scan axis of ``runtime.steps.build_train_chunk``."""
+        per = [self._host_batch(start + j) for j in range(device_steps)]
+        return {k: np.stack([b[k] for b in per]) for k in per[0]}
+
+    def chunk(self, start: int, device_steps: int, sharding=None) -> dict:
+        """Device-resident stacked chunk (one ``device_put`` per leaf).
+
+        ``sharding`` is the chunk-batch sharding tree from the bundle
+        (``build_train_chunk(...).in_shardings[2]``) — a dict of
+        NamedShardings, shape-agnostic so partial tail chunks reuse it.
+        """
+        host = self.chunk_host(start, device_steps)
+        if sharding is None:
+            return {k: jax.device_put(v) for k, v in host.items()}
+        return {k: jax.device_put(v, sharding[k]) for k, v in host.items()}
+
     def __iter__(self) -> Iterator[dict]:
         """Double-buffered iterator: host-side generation of batch i+1
         overlaps device compute on batch i."""
@@ -67,3 +85,72 @@ class TokenPipeline:
                 yield q.get()
         finally:
             stop.set()
+
+
+class ChunkPrefetcher:
+    """Double-buffered chunk feeder for the device-resident hot loop.
+
+    While chunk k executes on device, the background thread builds chunk
+    k+1 on the host AND ``device_put``s it — by the time the trainer asks
+    for the next chunk its transfer has already overlapped the previous
+    dispatch.  ``schedule`` is the ordered list of ``(start, device_steps)``
+    chunks the run will consume (tail chunks may be shorter); ``depth`` is
+    the number of chunks allowed in flight beyond the one executing.
+
+    ``get()`` returns ``(start, batches)`` in schedule order and raises
+    ``StopIteration`` past the end.  Always ``close()`` (or use as a
+    context manager) so a preempted segment doesn't leak the thread.
+    """
+
+    _END = object()
+
+    def __init__(self, pipe: TokenPipeline, schedule, sharding=None,
+                 depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
+        self._stop = threading.Event()
+        self._error: Optional[Exception] = None
+        self._thread = threading.Thread(
+            target=self._fill, args=(pipe, list(schedule), sharding),
+            daemon=True)
+        self._thread.start()
+
+    def _fill(self, pipe, schedule, sharding):
+        for entry in schedule + [self._END]:
+            try:
+                item = entry if entry is self._END else \
+                    (entry[0], pipe.chunk(entry[0], entry[1], sharding))
+            except Exception as e:      # surface in get(), don't hang it
+                self._error = e
+                item = self._END
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            if self._stop.is_set() or item is self._END:
+                return
+
+    def get(self, timeout: float = 120.0):
+        item = self._q.get(timeout=timeout)
+        if item is self._END:
+            if self._error is not None:
+                raise self._error
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        self._stop.set()
+        # drain so a producer blocked on put() sees the stop flag
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "ChunkPrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

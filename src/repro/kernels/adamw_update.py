@@ -1,0 +1,101 @@
+"""Pallas TPU fused AdamW leaf update (one kernel, zero f32 temp trees).
+
+The unfused ``optim.adamw._update_leaf`` materializes several full-leaf
+f32 temporaries (g32, m_new, v_hat, update) per tensor; on 1T-scale
+stacked leaves that peaks at ~6x params bytes, which is why the unfused
+path scans over the layer axis.  This kernel streams the four state
+tensors through VMEM one (block_rows, 128) tile at a time and fuses the
+whole elementwise chain — moment updates, bias correction, decoupled
+weight decay, parameter write — so peak temp memory is one tile and the
+layered scan becomes unnecessary.
+
+Schedule hyperparameters that change every step (lr, bias corrections)
+ride in SMEM as a tiny scalar vector; (b1, b2, eps, weight_decay) are
+compile-time constants.  Math matches ``_update_leaf`` exactly: f32
+accumulation regardless of param dtype, params written back in their own
+dtype, moments in f32 (the fused path is only engaged for the
+float32/full state recipe — quantized or factored state keeps the
+unfused path).
+
+Validated on CPU via interpret=True against kernels.ref.adamw_update_ref
+(tests/test_kernels.py: dtype sweep, weight-decay on/off, padding tails).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128                     # TPU lane width: tiles are (rows, 128)
+
+
+def _adamw_kernel(sc_ref, p_ref, g_ref, m_ref, v_ref,
+                  np_ref, nm_ref, nv_ref, *, b1: float, b2: float,
+                  eps: float, weight_decay: float):
+    lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    g = g_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    if weight_decay:
+        update = update + weight_decay * p
+    np_ref[...] = (p - lr * update).astype(np_ref.dtype)
+    nm_ref[...] = m_new
+    nv_ref[...] = v_new
+
+
+def adamw_update(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+                 lr: jax.Array, bc1: jax.Array, bc2: jax.Array, *,
+                 b1: float, b2: float, eps: float, weight_decay: float = 0.0,
+                 block_rows: int = 256, interpret: bool = False):
+    """One fused AdamW update for a leaf of any shape.
+
+    p (param dtype), g (grad dtype), m/v (f32) all share p.shape; lr and
+    the bias corrections bc1 = 1-b1^t, bc2 = 1-b2^t are traced scalars.
+    Returns (new_p p.dtype, new_m f32, new_v f32) with p.shape.
+    """
+    shape = p.shape
+    n = int(p.size)
+    if n == 0:
+        return p, m, v
+    tile = block_rows * LANE
+    npad = -(-n // tile) * tile
+    rows = npad // LANE
+
+    def flat(x, dtype=None):
+        x = x.reshape(-1)
+        if dtype is not None:
+            x = x.astype(dtype)
+        if npad != n:
+            x = jnp.pad(x, (0, npad - n))
+        return x.reshape(rows, LANE)
+
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         jnp.asarray(bc1, jnp.float32),
+                         jnp.asarray(bc2, jnp.float32)])
+    kernel = functools.partial(_adamw_kernel, b1=b1, b2=b2, eps=eps,
+                               weight_decay=weight_decay)
+    tile_spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    new_p, new_m, new_v = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            tile_spec, tile_spec, tile_spec, tile_spec,
+        ],
+        out_specs=[tile_spec, tile_spec, tile_spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, LANE), p.dtype),
+                   jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, LANE), jnp.float32)],
+        interpret=interpret,
+    )(scalars, flat(p), flat(g), flat(m, jnp.float32),
+      flat(v, jnp.float32))
+
+    def unflat(x):
+        return x.reshape(-1)[:n].reshape(shape)
+
+    return unflat(new_p), unflat(new_m), unflat(new_v)

@@ -1,0 +1,38 @@
+"""Shared kernel-runtime knobs.
+
+On this CPU container every Pallas wrapper defaults to interpret=True
+(the kernel body runs in Python, validating BlockSpec/grid logic); on a
+TPU runtime set ``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to
+compile.  Train-hot-loop kernels (fused xent / fused AdamW) are
+additionally gated by their own env switches because interpret mode is
+far too slow to sit inside every CPU test's train step.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+NEG_INF = -1e30
+
+
+def interpret_default() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def _env_gate(var: str) -> bool:
+    """Fused-train-kernel gate: explicit env wins, else TPU-only."""
+    val = os.environ.get(var)
+    if val is not None:
+        return val not in ("", "0")
+    return jax.default_backend() == "tpu"
+
+
+def fused_xent_default() -> bool:
+    return _env_gate("REPRO_FUSED_XENT")
+
+
+def fused_adamw_default() -> bool:
+    return _env_gate("REPRO_FUSED_ADAMW")

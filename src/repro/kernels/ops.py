@@ -7,21 +7,17 @@ set ``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to compile them.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.adamw_update import adamw_update
+from repro.kernels.common import interpret_default as _interpret_default
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gmm import gmm
 from repro.kernels.ssm_scan import ssd_scan
 from repro.kernels.wkv6 import wkv6
-
-
-def _interpret_default() -> bool:
-    if os.environ.get("REPRO_PALLAS_COMPILE"):
-        return False
-    return jax.default_backend() != "tpu"
+from repro.kernels.xent import softmax_xent
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
@@ -48,3 +44,21 @@ def gmm_op(x, w, *, block_c: int = 128, block_f: int = 128,
            block_d: int = 128):
     return gmm(x, w, block_c=block_c, block_f=block_f, block_d=block_d,
                interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_r", "block_v"))
+def softmax_xent_op(logits, labels, *, softcap=None, block_r: int = 128,
+                    block_v: int = 512):
+    return softmax_xent(logits, labels, softcap=softcap, block_r=block_r,
+                        block_v=block_v, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b1", "b2", "eps", "weight_decay",
+                                    "block_rows"))
+def adamw_update_op(p, g, m, v, lr, bc1, bc2, *, b1: float, b2: float,
+                    eps: float, weight_decay: float = 0.0,
+                    block_rows: int = 256):
+    return adamw_update(p, g, m, v, lr, bc1, bc2, b1=b1, b2=b2, eps=eps,
+                        weight_decay=weight_decay, block_rows=block_rows,
+                        interpret=_interpret_default())

@@ -70,3 +70,28 @@ def gmm_ref(x, w):
     """Grouped matmul: x (E,C,D) @ w (E,D,F) -> (E,C,F) in x.dtype."""
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(x.dtype)
+
+
+def softmax_xent_ref(logits, labels, *, softcap=None):
+    """Per-row NLL, f32: logits (R,V); labels (R,) int32 -> (R,) f32."""
+    lf = logits.astype(jnp.float32)
+    if softcap is not None:
+        lf = softcap * jnp.tanh(lf / softcap)
+    m = jnp.max(lf, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(lf - m[:, None]), axis=-1))
+    gold = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    return lse - gold
+
+
+def adamw_update_ref(p, g, m, v, lr, bc1, bc2, *, b1, b2, eps,
+                     weight_decay=0.0):
+    """Unfused AdamW leaf update (mirrors optim.adamw._update_leaf for the
+    float32/full state recipe): f32 math, params back in p.dtype."""
+    g32 = g.astype(jnp.float32)
+    m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * g32
+    v_new = b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.square(g32)
+    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    if weight_decay:
+        update = update + weight_decay * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+    return new_p, m_new, v_new

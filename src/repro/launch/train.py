@@ -32,7 +32,8 @@ from repro.launch.mesh import PRODUCTION_MESH_SHAPE
 def train_job(arch: str, *, steps: int, seq: int, batch: int, smoke: bool,
               ckpt_dir: str = "", ckpt_every: int = 0, fail_at: int = -1,
               log_every: int = 10, production_mesh: bool = False,
-              cfg_override=None, seed: int = 0) -> TrainJob:
+              cfg_override=None, seed: int = 0,
+              device_steps: int = 1) -> TrainJob:
     """The TrainJob resource the legacy flag surface declares."""
     config = None
     if cfg_override is not None:
@@ -44,7 +45,8 @@ def train_job(arch: str, *, steps: int, seq: int, batch: int, smoke: bool,
         base_shape=PRODUCTION_MESH_SHAPE if production_mesh else (1, 1),
         max_data=None if production_mesh else 1,
         ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, keep=2,
-        log_every=log_every, fail_at=fail_at, seed=seed, config=config)
+        log_every=log_every, fail_at=fail_at, seed=seed, config=config,
+        device_steps=device_steps)
 
 
 def apply_train(spec: TrainJob, *, timeout: float = 3600.0):
@@ -60,7 +62,7 @@ def apply_train(spec: TrainJob, *, timeout: float = 3600.0):
 def train(arch: str, *, steps: int, seq: int, batch: int, smoke: bool,
           ckpt_dir: str = "", ckpt_every: int = 0, fail_at: int = -1,
           log_every: int = 10, production_mesh: bool = False,
-          cfg_override=None):
+          cfg_override=None, device_steps: int = 1):
     """Deprecated shim — declare a ``repro.api.TrainJob`` and apply it
     through a ``Session`` instead.  Kept so pre-API callers (and the
     equivalence regression) keep working unchanged."""
@@ -68,7 +70,7 @@ def train(arch: str, *, steps: int, seq: int, batch: int, smoke: bool,
                      ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
                      fail_at=fail_at, log_every=log_every,
                      production_mesh=production_mesh,
-                     cfg_override=cfg_override)
+                     cfg_override=cfg_override, device_steps=device_steps)
     out = apply_train(spec)
     return {"losses": out["losses"], "params": out["params"],
             "metrics": out["metrics"], "report": out["report"]}
@@ -88,13 +90,18 @@ def main():
     ap.add_argument("--fail-at", type=int, default=-1,
                     help="inject one crash at this step; the elastic "
                          "supervisor restores and finishes the run")
+    ap.add_argument("--device-steps", type=int, default=1,
+                    help="optimizer steps fused into one device dispatch "
+                         "(lax.scan hot loop); ckpt/log cadences snap up "
+                         "to multiples of this")
     args = ap.parse_args()
     spec = cli.manifest_spec(args, TrainJob.KIND)
     if spec is None:
         spec = train_job(args.arch, steps=args.steps, seq=args.seq,
                          batch=args.batch, smoke=args.smoke,
                          ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                         fail_at=args.fail_at, seed=args.seed)
+                         fail_at=args.fail_at, seed=args.seed,
+                         device_steps=args.device_steps)
     out = apply_train(spec)
     first, last = out["losses"][0], out["losses"][-1]
     print(f"[train] loss {first:.4f} -> {last:.4f} "

@@ -9,11 +9,23 @@ Full logits are (B, S, V) — replicated f32 copies dominate training HBM
     scan machinery; peak is one small f32 block per chip.
   * ``chunked_cross_entropy`` (fallback for non-divisible vocabs, e.g.
     granite's 49155): scan over sequence chunks with per-chunk remat.
+
+The chunked path can route its softmax/gold math through the fused Pallas
+kernel (``kernels.xent.softmax_xent``: online-logsumexp over vocab tiles,
+fused backward, never materializes the f32 softmax).  Gate: ``fused=None``
+defaults to on for the TPU backend and off elsewhere; set
+``REPRO_FUSED_XENT=1`` to force it on CPU, where it runs under Pallas
+interpret mode (correct but slow — parity is pinned by tests/test_kernels.py
+against kernels.ref.softmax_xent_ref).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.common import fused_xent_default, interpret_default
 
 
 def sharded_cross_entropy(ctx, x, labels, head, *, softcap=None):
@@ -44,15 +56,29 @@ def _chunk_nll(x_chunk, labels_chunk, head):
     return jnp.sum(lse - gold)
 
 
-def chunked_cross_entropy(x, labels, head, *, softcap=None, chunk: int = 512):
+def chunked_cross_entropy(x, labels, head, *, softcap=None, chunk: int = 512,
+                          fused: Optional[bool] = None):
     """Mean token NLL from final hidden states, seq-chunked.
 
     x (B,S,D) final hidden states; labels (B,S) int32; head (V,D).
     softcap: final-logit softcap (gemma2) — folded into the chunk fn.
+    fused: route the per-chunk softmax/gold math through the fused Pallas
+    kernel (None = backend default, see module docstring).
     """
     B, S, D = x.shape
+    if fused is None:
+        fused = fused_xent_default()
 
     def fn(xc, lc):
+        if fused:
+            from repro.kernels.xent import softmax_xent
+            V = head.shape[0]
+            logits = jnp.einsum("bcd,vd->bcv", xc,
+                                head).astype(jnp.float32)
+            nll = softmax_xent(logits.reshape(-1, V), lc.reshape(-1),
+                               softcap=softcap,
+                               interpret=interpret_default())
+            return jnp.sum(nll)
         logits = jnp.einsum("bcd,vd->bcv", xc, head).astype(jnp.float32)
         if softcap is not None:
             logits = softcap * jnp.tanh(logits / softcap)

@@ -9,12 +9,13 @@ inherited from the param logical axes.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import OptimizerConfig
+from repro.kernels.common import fused_adamw_default, interpret_default
 from repro.models.params import PSpec, is_pspec
 from repro.optim import quant
 from repro.optim.schedule import learning_rate
@@ -128,7 +129,8 @@ def clip_by_global_norm(grads, max_norm: float):
     return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
 
 
-def apply_updates(param_schema, params, grads, state, ocfg: OptimizerConfig):
+def apply_updates(param_schema, params, grads, state, ocfg: OptimizerConfig,
+                  *, fused: Optional[bool] = None):
     """One AdamW step.  Returns (new_params, new_state, stats).
 
     Memory: the elementwise update math runs in f32, so applying it to a
@@ -136,7 +138,16 @@ def apply_updates(param_schema, params, grads, state, ocfg: OptimizerConfig):
     (observed: ~6x params bytes on the 1T arch).  Leaves whose leading axis
     is the stacked "layers" dim are therefore updated with a lax.scan over
     that axis — peak update temps shrink by num_groups.
+
+    ``fused``: route plain float32/full-state leaves through the fused
+    Pallas update kernel (``kernels.adamw_update``) — one elementwise
+    kernel per leaf, no f32 temp trees AND no layered scan needed.
+    None = backend default (TPU on, CPU off; ``REPRO_FUSED_ADAMW=1``
+    forces it on CPU under interpret mode).  Quantized / factored state
+    always keeps the unfused path.
     """
+    if fused is None:
+        fused = fused_adamw_default()
     if ocfg.grad_clip:
         grads, gnorm = clip_by_global_norm(grads, ocfg.grad_clip)
     else:
@@ -148,6 +159,15 @@ def apply_updates(param_schema, params, grads, state, ocfg: OptimizerConfig):
     bc2 = 1.0 - ocfg.b2 ** t
 
     def leaf(sch, p, g, m, v):
+        # the fused kernel streams tiles through VMEM, so even stacked
+        # "layers" leaves go through whole (no scan, no temp blowup)
+        if (fused and not isinstance(m, dict) and not isinstance(v, dict)
+                and m.dtype == jnp.float32 and v.dtype == jnp.float32):
+            from repro.kernels.adamw_update import adamw_update
+            wd = ocfg.weight_decay if len(sch.shape) >= 2 else 0.0
+            return adamw_update(p, g, m, v, lr, bc1, bc2, b1=ocfg.b1,
+                                b2=ocfg.b2, eps=ocfg.eps, weight_decay=wd,
+                                interpret=interpret_default())
         layered = (sch.axes and sch.axes[0] == "layers"
                    and len(sch.shape) >= 2 and sch.shape[0] > 1)
         if not layered:

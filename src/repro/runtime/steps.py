@@ -35,6 +35,7 @@ class StepBundle:
     out_shardings: Any
     donate_argnums: Tuple[int, ...] = ()
     accum_steps: int = 1      # microbatches folded into one optimizer step
+    device_steps: int = 1     # optimizer steps folded into one dispatch
 
     def jit(self):
         return jax.jit(self.fn, in_shardings=self.in_shardings,
@@ -107,18 +108,31 @@ def extras_specs(cfg: ModelConfig, B: int):
 # train
 # ---------------------------------------------------------------------------
 
-def build_train(cfg: ModelConfig, par: ParallelConfig, ocfg: OptimizerConfig,
-                mesh: Mesh, shape: ShapeConfig) -> StepBundle:
-    """Build one jitted optimizer step.
+@dataclass
+class _TrainPieces:
+    """Shared setup between build_train / build_train_chunk: ONE place
+    resolves the config, accumulation plan and shardings, and ONE
+    ``train_step`` body is compiled in both — the chunked dispatch is a
+    ``lax.scan`` over the *identical* per-step computation, which is what
+    makes the losses bit-identical between the two (pinned by
+    tests/test_train_hot_loop.py)."""
+    train_step: Callable
+    abstract_params: Any
+    abstract_opt: Any
+    param_shd: Any
+    opt_shd: Any
+    batch_abs: Any
+    batch_axes: Any
+    batch_shd: Any
+    metrics_abs: Any
+    mesh: Mesh
+    rules: Any
+    accum: int
 
-    Gradient accumulation contract (``ocfg.accum_steps``): the step always
-    consumes the FULL ``shape.global_batch`` rows per call and splits them
-    into ``accum_steps`` sequential microbatches inside the jit, so the
-    global batch — and therefore the training trajectory — is independent
-    of ``accum_steps``.  Elastic rescale (repro.elastic) relies on this:
-    shrinking the data axis and raising ``accum_steps`` keeps batch x accum
-    constant while bounding per-device microbatch memory.
-    """
+
+def _train_pieces(cfg: ModelConfig, par: ParallelConfig,
+                  ocfg: OptimizerConfig, mesh: Mesh,
+                  shape: ShapeConfig) -> _TrainPieces:
     cfg = resolve_cfg(cfg, shape)
     accum = max(ocfg.accum_steps, 1)
     if shape.global_batch % accum:
@@ -177,13 +191,97 @@ def build_train(cfg: ModelConfig, par: ParallelConfig, ocfg: OptimizerConfig,
     metrics_abs = {"loss": jax.ShapeDtypeStruct((), jnp.float32),
                    "grad_norm": jax.ShapeDtypeStruct((), jnp.float32),
                    "lr": jax.ShapeDtypeStruct((), jnp.float32)}
+    return _TrainPieces(
+        train_step=train_step, abstract_params=abstract_params,
+        abstract_opt=abstract_opt, param_shd=param_shd, opt_shd=opt_shd,
+        batch_abs=batch_abs, batch_axes=batch_axes, batch_shd=batch_shd,
+        metrics_abs=metrics_abs, mesh=mesh, rules=rules, accum=accum)
+
+
+def build_train(cfg: ModelConfig, par: ParallelConfig, ocfg: OptimizerConfig,
+                mesh: Mesh, shape: ShapeConfig) -> StepBundle:
+    """Build one jitted optimizer step.
+
+    Gradient accumulation contract (``ocfg.accum_steps``): the step always
+    consumes the FULL ``shape.global_batch`` rows per call and splits them
+    into ``accum_steps`` sequential microbatches inside the jit, so the
+    global batch — and therefore the training trajectory — is independent
+    of ``accum_steps``.  Elastic rescale (repro.elastic) relies on this:
+    shrinking the data axis and raising ``accum_steps`` keeps batch x accum
+    constant while bounding per-device microbatch memory.
+    """
+    tp = _train_pieces(cfg, par, ocfg, mesh, shape)
     return StepBundle(
-        fn=train_step,
-        abstract_args=(abstract_params, abstract_opt, batch_abs),
-        in_shardings=(param_shd, opt_shd, batch_shd),
-        out_shardings=(param_shd, opt_shd, _replicated(metrics_abs, mesh)),
+        fn=tp.train_step,
+        abstract_args=(tp.abstract_params, tp.abstract_opt, tp.batch_abs),
+        in_shardings=(tp.param_shd, tp.opt_shd, tp.batch_shd),
+        out_shardings=(tp.param_shd, tp.opt_shd,
+                       _replicated(tp.metrics_abs, mesh)),
         donate_argnums=(0, 1),
-        accum_steps=accum,
+        accum_steps=tp.accum,
+    )
+
+
+def chunk_batch_specs(batch_abs, batch_axes, device_steps: int):
+    """Stack ``device_steps`` per-step batches along a new leading axis.
+
+    Returns (abstract, axes) trees whose leaves are (K, ...) with an
+    unsharded leading axis — the scan dimension of ``build_train_chunk``.
+    """
+    K = max(device_steps, 1)
+    abstract = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((K,) + a.shape, a.dtype), batch_abs)
+    axes = jax.tree.map(lambda ax: (None,) + ax, batch_axes,
+                        is_leaf=_is_axes_leaf)
+    return abstract, axes
+
+
+def build_train_chunk(cfg: ModelConfig, par: ParallelConfig,
+                      ocfg: OptimizerConfig, mesh: Mesh, shape: ShapeConfig,
+                      device_steps: int) -> StepBundle:
+    """Build one jitted dispatch of ``device_steps`` optimizer steps.
+
+    The device-resident hot loop: a ``lax.scan`` over K = ``device_steps``
+    full optimizer steps (each still folding ``ocfg.accum_steps``
+    microbatches) with the (params, opt_state) carry donated and never
+    leaving the device.  The host dispatches once per chunk and receives
+    per-step metrics stacked (K,), so host round-trips per optimizer step
+    drop from O(1) to O(1/device_steps).
+
+    The batch argument is the per-step batch stacked along a new leading
+    K axis (see ``chunk_batch_specs`` / ``TokenPipeline.chunk``); each
+    scanned step consumes the same FULL ``shape.global_batch`` rows the
+    per-step ``build_train`` would, so the training trajectory is
+    independent of ``device_steps`` (and bit-identical to per-step
+    dispatch — the scan body IS the per-step ``train_step``).
+    """
+    K = max(device_steps, 1)
+    tp = _train_pieces(cfg, par, ocfg, mesh, shape)
+    chunk_abs, chunk_axes = chunk_batch_specs(tp.batch_abs, tp.batch_axes, K)
+    chunk_shd = _shardings(chunk_abs, chunk_axes, mesh, tp.rules)
+
+    def train_chunk(params, opt_state, batches):
+        def one(carry, batch):
+            p, o = carry
+            p, o, m = tp.train_step(p, o, batch)
+            return (p, o), m
+
+        (params, opt_state), ms = jax.lax.scan(one, (params, opt_state),
+                                               batches)
+        return params, opt_state, ms      # metrics leaves stacked (K,)
+
+    chunk_metrics_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((K,) + a.shape, a.dtype),
+        tp.metrics_abs)
+    return StepBundle(
+        fn=train_chunk,
+        abstract_args=(tp.abstract_params, tp.abstract_opt, chunk_abs),
+        in_shardings=(tp.param_shd, tp.opt_shd, chunk_shd),
+        out_shardings=(tp.param_shd, tp.opt_shd,
+                       _replicated(chunk_metrics_abs, mesh)),
+        donate_argnums=(0, 1),
+        accum_steps=tp.accum,
+        device_steps=K,
     )
 
 

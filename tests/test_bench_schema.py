@@ -44,6 +44,26 @@ def committed_bench_files():
     return sorted(ROOT.glob("BENCH_*.json"))
 
 
+def test_train_bench_is_committed():
+    """ISSUE 7 acceptance: BENCH_train.json carries the per-step vs
+    chunked-dispatch trajectory, with chunked host syncs/step reduced."""
+    path = ROOT / "BENCH_train.json"
+    assert path.exists(), "BENCH_train.json must be committed"
+    doc = json.loads(path.read_text())
+    rows = {r["name"]: r for r in doc["rows"]}
+    per_step = rows["train_per_step"]
+    chunked = next(v for k, v in rows.items()
+                   if k.startswith("train_chunked_k"))
+    for r in (per_step, chunked):
+        assert {"tok_s", "host_syncs_per_step", "t_first_s",
+                "device_steps"} <= set(r)
+    assert per_step["device_steps"] == 1
+    assert chunked["device_steps"] > 1
+    # the point of the hot loop: host round-trips per optimizer step
+    # drop from O(1) to O(1/device_steps)
+    assert chunked["host_syncs_per_step"] < per_step["host_syncs_per_step"]
+
+
 def test_scenario_bench_is_committed():
     """ISSUE 6 acceptance: BENCH_scenarios.json exists with >= 1 row."""
     path = ROOT / "BENCH_scenarios.json"

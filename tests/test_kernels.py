@@ -95,3 +95,171 @@ def test_gmm(E, C, D, F, bc, bf, bd, dtype):
     want = ref.gmm_ref(x, w)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,V,br,bv", [
+    (128, 512, 128, 512),      # single tile both ways
+    (256, 1024, 128, 256),     # multi-tile vocab sweep
+    (100, 777, 64, 256),       # ragged rows AND vocab (padding paths)
+    (32, 50, 32, 128),         # vocab smaller than one tile
+])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_softmax_xent(R, V, br, bv, softcap):
+    from repro.kernels.xent import softmax_xent
+    k1, k2 = jax.random.split(jax.random.key(4))
+    logits = 4.0 * jax.random.normal(k1, (R, V), jnp.float32)
+    labels = jax.random.randint(k2, (R,), 0, V)
+    out = softmax_xent(logits, labels, softcap=softcap, block_r=br,
+                       block_v=bv, interpret=True)
+    want = ref.softmax_xent_ref(logits, labels, softcap=softcap)
+    assert out.shape == (R,) and out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_softmax_xent_grad(softcap):
+    from repro.kernels.xent import softmax_xent
+    k1, k2 = jax.random.split(jax.random.key(5))
+    logits = 4.0 * jax.random.normal(k1, (96, 300), jnp.float32)
+    labels = jax.random.randint(k2, (96,), 0, 300)
+
+    def mean_nll(fn):
+        return lambda x: jnp.mean(fn(x))
+
+    g = jax.grad(mean_nll(lambda x: softmax_xent(
+        x, labels, softcap=softcap, block_r=64, block_v=128,
+        interpret=True)))(logits)
+    g_ref = jax.grad(mean_nll(lambda x: ref.softmax_xent_ref(
+        x, labels, softcap=softcap)))(logits)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_xent_extreme_logits():
+    """Online logsumexp must not overflow where naive exp would."""
+    from repro.kernels.xent import softmax_xent
+    logits = jnp.array([[1000.0, 0.0, -1000.0, 500.0]] * 8, jnp.float32)
+    labels = jnp.array([0, 1, 2, 3, 0, 1, 2, 3])
+    out = softmax_xent(logits, labels, block_r=8, block_v=128,
+                       interpret=True)
+    want = ref.softmax_xent_ref(logits, labels)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [
+    (256, 128),                # exact tiles
+    (3, 100, 37),              # ragged flatten -> padding tail
+    (5,),                      # tiny 1-D leaf, all padding
+])
+@pytest.mark.parametrize("pdtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("weight_decay", [0.0, 0.1])
+def test_adamw_update(shape, pdtype, weight_decay):
+    from repro.kernels.adamw_update import adamw_update
+    ks = jax.random.split(jax.random.key(6), 4)
+    p = jax.random.normal(ks[0], shape, pdtype)
+    g = jax.random.normal(ks[1], shape, jnp.float32)
+    m = 0.1 * jax.random.normal(ks[2], shape, jnp.float32)
+    v = jnp.abs(jax.random.normal(ks[3], shape)).astype(jnp.float32)
+    lr, bc1, bc2 = jnp.float32(3e-4), jnp.float32(0.271), jnp.float32(0.0297)
+    hp = dict(b1=0.9, b2=0.95, eps=1e-8, weight_decay=weight_decay)
+    new_p, new_m, new_v = adamw_update(p, g, m, v, lr, bc1, bc2,
+                                       block_rows=64, interpret=True, **hp)
+    want_p, want_m, want_v = ref.adamw_update_ref(p, g, m, v, lr, bc1, bc2,
+                                                  **hp)
+    assert new_p.shape == shape and new_p.dtype == pdtype
+    assert new_m.dtype == jnp.float32 and new_v.dtype == jnp.float32
+    # a couple ulp of slack: XLA fuses the ref's multiply-add chains with
+    # FMA, the interpreted kernel evaluates them unfused
+    np.testing.assert_allclose(np.asarray(new_m), np.asarray(want_m),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(new_v), np.asarray(want_v),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(new_p, np.float32),
+                               np.asarray(want_p, np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_adamw_update_f32_accumulation():
+    """bf16 params must be updated in f32: a tiny lr*update that underflows
+    a pure-bf16 subtract must still match the f32-accumulated ref."""
+    from repro.kernels.adamw_update import adamw_update
+    p = jnp.full((128,), 1.0, jnp.bfloat16)
+    g = jnp.full((128,), 1e-3, jnp.float32)
+    m = jnp.zeros((128,), jnp.float32)
+    v = jnp.zeros((128,), jnp.float32)
+    lr, bc1, bc2 = jnp.float32(1e-5), jnp.float32(0.1), jnp.float32(0.05)
+    hp = dict(b1=0.9, b2=0.95, eps=1e-8)
+    new_p, _, _ = adamw_update(p, g, m, v, lr, bc1, bc2, block_rows=8,
+                               interpret=True, **hp)
+    want_p, _, _ = ref.adamw_update_ref(p, g, m, v, lr, bc1, bc2, **hp)
+    np.testing.assert_array_equal(np.asarray(new_p, np.float32),
+                                  np.asarray(want_p, np.float32))
+
+
+def test_apply_updates_fused_matches_unfused():
+    """The optimizer-level fused gate: full schema tree, stacked layers
+    leaf included (fused skips the layered scan entirely)."""
+    from repro.configs.base import OptimizerConfig
+    from repro.models.params import PSpec
+    from repro.optim import adamw as A
+
+    schema = {"w": PSpec((8, 64), (None, None), "normal"),
+              "b": PSpec((64,), (None,), "zeros"),
+              "stack": PSpec((3, 16, 16), ("layers", None, None), "normal")}
+    ks = jax.random.split(jax.random.key(7), 6)
+    params = {"w": jax.random.normal(ks[0], (8, 64), jnp.bfloat16),
+              "b": jax.random.normal(ks[1], (64,), jnp.bfloat16),
+              "stack": jax.random.normal(ks[2], (3, 16, 16), jnp.bfloat16)}
+    grads = {"w": jax.random.normal(ks[3], (8, 64), jnp.float32),
+             "b": jax.random.normal(ks[4], (64,), jnp.float32),
+             "stack": jax.random.normal(ks[5], (3, 16, 16), jnp.float32)}
+    state = {"m": jax.tree.map(jnp.zeros_like, grads),
+             "v": jax.tree.map(jnp.zeros_like, grads),
+             "count": jnp.zeros((), jnp.int32)}
+    ocfg = OptimizerConfig(warmup_steps=2, decay_steps=10)
+    p_u, s_u, _ = A.apply_updates(schema, params, grads, state, ocfg,
+                                  fused=False)
+    p_f, s_f, _ = A.apply_updates(schema, params, grads, state, ocfg,
+                                  fused=True)
+    for k in p_u:
+        np.testing.assert_allclose(np.asarray(p_u[k], np.float32),
+                                   np.asarray(p_f[k], np.float32),
+                                   rtol=1e-2, atol=1e-2)   # bf16 rounding
+        np.testing.assert_allclose(np.asarray(s_u["m"][k]),
+                                   np.asarray(s_f["m"][k]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(s_u["v"][k]),
+                                   np.asarray(s_f["v"][k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_chunked_cross_entropy_fused_matches_unfused():
+    from repro.models import losses
+    ks = jax.random.split(jax.random.key(8), 3)
+    x = jax.random.normal(ks[0], (2, 32, 16), jnp.float32)
+    lab = jax.random.randint(ks[1], (2, 32), 0, 100)
+    head = jax.random.normal(ks[2], (100, 16), jnp.float32)
+    for cap in (None, 20.0):
+        a = losses.chunked_cross_entropy(x, lab, head, softcap=cap,
+                                         chunk=16, fused=False)
+        b = losses.chunked_cross_entropy(x, lab, head, softcap=cap,
+                                         chunk=16, fused=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+        ga = jax.grad(lambda t: losses.chunked_cross_entropy(
+            t, lab, head, softcap=cap, chunk=16, fused=False))(x)
+        gb = jax.grad(lambda t: losses.chunked_cross_entropy(
+            t, lab, head, softcap=cap, chunk=16, fused=True))(x)
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,198 @@
+"""Device-resident hot loop guardrails.
+
+The load-bearing invariant: ``build_train_chunk`` (lax.scan over
+device_steps optimizer steps, one dispatch) must produce EXACTLY the
+trajectory of per-step ``build_train`` dispatch — same losses, same params,
+bitwise.  Both compile the same ``train_step`` closure (runtime.steps
+._train_pieces), so this holds to the bit on the deterministic CPU backend.
+Plus: chunk scheduling math, the prefetcher contract, elastic rescale
+across a chunk boundary, and the host-sync accounting the bench records.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import OptimizerConfig, ShapeConfig
+from repro.core.orchestrator import Cluster
+from repro.data.tokens import ChunkPrefetcher, TokenPipeline
+from repro.elastic import ElasticTrainer, ElasticTrainSpec
+from repro.elastic.trainer import _chunk_schedule, _snap
+from repro.launch.mesh import single_device_mesh
+from repro.models import params as pr
+from repro.optim import adamw
+from repro.runtime import steps as steps_mod
+
+
+# ------------------------------------------------------- scheduling math
+
+def test_snap_rounds_cadence_up_to_chunk_multiples():
+    assert _snap(0, 4) == 0                   # off stays off
+    assert _snap(5, 1) == 5
+    assert _snap(5, 4) == 8
+    assert _snap(4, 4) == 4
+    assert _snap(1, 8) == 8
+
+
+def test_chunk_schedule_aligns_to_absolute_grid():
+    # aligned start: steady chunks + ragged tail
+    assert _chunk_schedule(0, 10, 4) == [(0, 4), (4, 4), (8, 2)]
+    # unaligned restore: partial head chunk re-aligns to the global grid,
+    # so snapped cadences keep firing on the same absolute boundaries
+    assert _chunk_schedule(5, 10, 4) == [(5, 3), (8, 2)]
+    assert _chunk_schedule(0, 6, 1) == [(i, 1) for i in range(6)]
+    assert _chunk_schedule(6, 6, 4) == []
+
+
+def test_chunk_batch_specs_stack_leading_axis():
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    shape = ShapeConfig("t", 32, 4, "train")
+    abs_, axes = steps_mod.batch_specs(cfg, shape)
+    cab, cax = steps_mod.chunk_batch_specs(abs_, axes, 3)
+    assert cab["tokens"].shape == (3, 4, 32)
+    assert cax["tokens"] == (None, "batch", "seq")
+
+
+# ------------------------------------------------------------ prefetcher
+
+def test_chunk_prefetcher_yields_schedule_in_order():
+    pipe = TokenPipeline(97, 16, 2, seed=3)
+    schedule = [(0, 2), (2, 2), (4, 1)]
+    with ChunkPrefetcher(pipe, schedule, depth=2) as pf:
+        for start, k in schedule:
+            got_start, batches = pf.get()
+            assert got_start == start
+            assert batches["tokens"].shape == (k, 2, 16)
+            np.testing.assert_array_equal(
+                np.asarray(batches["tokens"]),
+                pipe.chunk_host(start, k)["tokens"])
+        with pytest.raises(StopIteration):
+            pf.get()
+
+
+def test_chunk_prefetcher_propagates_producer_error():
+    class Boom(TokenPipeline):
+        def chunk(self, start, device_steps, sharding=None):
+            raise ValueError("boom at chunk build")
+
+    with ChunkPrefetcher(Boom(97, 16, 2), [(0, 2)], depth=1) as pf:
+        with pytest.raises(ValueError, match="boom"):
+            pf.get(timeout=10.0)
+
+
+def test_chunk_prefetcher_close_joins_thread_midstream():
+    pipe = TokenPipeline(97, 16, 2)
+    pf = ChunkPrefetcher(pipe, [(i, 2) for i in range(0, 40, 2)], depth=1)
+    pf.get()                     # consume one, leave the producer blocked
+    pf.close()
+    assert not pf._thread.is_alive()
+    assert threading.active_count() < 50     # no leaked producers
+
+
+# -------------------------------------- chunked == per-step, bit for bit
+
+def _init_state(cfg, ocfg):
+    mod = steps_mod._model_module(cfg)
+    schema = mod.lm_schema(cfg)
+    params = pr.init_params(schema, jax.random.key(0), cfg.param_dtype)
+    opt = pr.init_params(adamw.opt_state_schema(schema, ocfg),
+                         jax.random.key(1), "float32")
+    return params, opt
+
+
+def test_chunked_dispatch_matches_per_step_bitwise():
+    """6 optimizer steps, accum_steps=2: one per-step run vs two K=3 chunk
+    dispatches must agree on every loss and every param BIT — the scan body
+    is the identical train_step closure."""
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    par = registry.get_parallel("phi4-mini-3.8b")
+    ocfg = OptimizerConfig(warmup_steps=2, decay_steps=100, accum_steps=2)
+    shape = ShapeConfig("t", 32, 4, "train")
+    mesh = single_device_mesh()
+    pipe = TokenPipeline(cfg.vocab_size, 32, 4, seed=11)
+    STEPS, K = 6, 3
+
+    step_b = steps_mod.build_train(cfg, par, ocfg, mesh, shape)
+    chunk_b = steps_mod.build_train_chunk(cfg, par, ocfg, mesh, shape, K)
+    assert chunk_b.device_steps == K and chunk_b.accum_steps == 2
+
+    with mesh:
+        p1, o1 = _init_state(cfg, ocfg)
+        step_fn = step_b.jit()
+        losses_step = []
+        for i in range(STEPS):
+            p1, o1, m = step_fn(p1, o1, pipe.batch(i))
+            losses_step.append(jax.device_get(m["loss"]))
+
+        p2, o2 = _init_state(cfg, ocfg)
+        chunk_fn = chunk_b.jit()
+        losses_chunk = []
+        for start in range(0, STEPS, K):
+            p2, o2, ms = chunk_fn(p2, o2, pipe.chunk(start, K))
+            losses_chunk.extend(jax.device_get(ms["loss"]))
+
+    np.testing.assert_array_equal(np.asarray(losses_step),
+                                  np.asarray(losses_chunk))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# -------------------------------------------------- elastic chunked runs
+
+def _run_elastic(tmp_path, tag, **kw):
+    from repro.data.objectstore import ObjectStore
+
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    par = registry.get_parallel("phi4-mini-3.8b")
+    spec = ElasticTrainSpec(cfg, par, OptimizerConfig(warmup_steps=2,
+                                                      decay_steps=100),
+                            steps=7, seq_len=32, global_batch=4,
+                            base_shape=(1, 1), max_data=1, ckpt_every=2,
+                            log_every=4, verbose=False, **kw)
+    store = ObjectStore(str(tmp_path / tag))
+    trainer = ElasticTrainer(Cluster(devices=jax.devices()), spec,
+                             store=store)
+    return trainer.run()
+
+
+def test_elastic_chunked_run_matches_per_step_run(tmp_path):
+    """The full trainer at device_steps=3 (ragged 7-step run: chunks of
+    3/3/1) reproduces the device_steps=1 loss trajectory exactly."""
+    out1 = _run_elastic(tmp_path, "k1", device_steps=1)
+    out3 = _run_elastic(tmp_path, "k3", device_steps=3)
+    assert len(out3["losses"]) == 7
+    np.testing.assert_array_equal(np.asarray(out1["losses"]),
+                                  np.asarray(out3["losses"]))
+    assert out3["report"].global_batch_constant
+
+
+def test_elastic_rescale_across_chunk_boundary(tmp_path):
+    """Crash injected INSIDE chunk [2,3]: the restored segment starts from
+    the last checkpoint on an unaligned step, re-aligns to the chunk grid,
+    and finishes with every step accounted for and batch x accum constant
+    — losses identical to an uninterrupted per-step run (stateless data +
+    exact checkpoint restore)."""
+    clean = _run_elastic(tmp_path, "clean", device_steps=1)
+    out = _run_elastic(tmp_path, "fail", device_steps=2, fail_at=3)
+    assert len(out["losses"]) == 7               # every step accounted for
+    rep = out["report"]
+    outcomes = [s.outcome for s in rep.segments]
+    assert outcomes[0] == "error" and outcomes[-1] == "done"
+    assert rep.global_batch_constant
+    np.testing.assert_array_equal(np.asarray(clean["losses"]),
+                                  np.asarray(out["losses"]))
+
+
+def test_chunked_dispatch_reduces_host_syncs(tmp_path):
+    """The point of the hot loop: host round-trips per optimizer step drop
+    from O(1) at K=1 to O(1/K)."""
+    r1 = _run_elastic(tmp_path, "hs1", device_steps=1)["report"]
+    r4 = _run_elastic(tmp_path, "hs4", device_steps=4)["report"]
+    assert r1.host_syncs > 0 and r4.host_syncs > 0
+    assert r4.host_syncs < r1.host_syncs
+    assert r4.host_syncs_per_step < r1.host_syncs_per_step
+    assert "host_syncs_per_step" in r4.to_json()
