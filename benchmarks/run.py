@@ -18,6 +18,9 @@ Outputs ``name,us_per_call,derived`` CSV rows:
   serve_*    — serving: prefill latency + decode steps/s.
   fabric_*   — multi-site federation: locality-aware vs data-blind
                placement (derived = bytes moved over the links).
+  workflow_* — workflow programs (repro.flow): diamond-with-fan-out
+               graph makespan, serial vs concurrent branches spread
+               across a 3-site fabric (derived = makespan + ratio).
   vcluster_* — multi-tenant fair share: dominant-share scheduling vs
                FIFO skew, preemption/resume cost, monitor event lag.
   scenario_* — production-chaos harness: diurnal replay under site
@@ -61,6 +64,8 @@ KNOWN_EXTRA_KEYS = frozenset({
     "steps_lost", "preemptions", "recoveries",
     # fair share / monitoring
     "makespan_ratio", "fifo_skew", "monitor_lag_s", "monitor_events",
+    # workflow fan-out (workflow_* rows)
+    "width", "fanout_ratio", "branch_sites",
     # chaos scenarios
     "fairshare_skew", "chaos_applied", "windows", "horizon_s",
     "offered", "served", "goodput", "slo_pass",
@@ -405,6 +410,73 @@ def bench_fabric_placement(fast: bool):
             makespan_s=round(makespan, 3))
 
 
+def bench_workflow_fanout(fast: bool):
+    """Workflow programs (repro.flow, ISSUE 8): the diamond-with-fan-out
+    graph on a 3-site fabric, serial branches vs the concurrent branch
+    pool.
+
+    Each scatter branch models an I/O-bound shard (a fixed simulated
+    latency — the regime where the paper's Kepler programs win by
+    running independent actors at different sites at once).  The SAME
+    graph runs twice: ``max_workers=1`` dispatches the branches one at a
+    time, ``max_workers=8`` overlaps them across the federation, spread
+    by the planner's in-flight load accounting.  The acceptance bar is
+    makespan ratio < 0.6; fresh stores per run, so no marker resume
+    bleeds between the two."""
+    from repro.core.workflow import Workflow
+    from repro.fabric import Fabric, FederatedStore, PlacementPlanner
+    from repro.flow import GraphRunner
+    from repro.vcluster.monitor import EventBus
+
+    width = 8 if fast else 12
+    branch_s = 0.05
+
+    def branch(ctx):
+        time.sleep(branch_s)                  # simulated shard latency
+        return {"i": ctx.inputs["index"]}
+
+    graph = {"nodes": [
+        {"step": "plan", "fn": lambda ctx: {
+            "chunks": [f"c{i}" for i in range(width)]}},
+        {"step": "seg", "deps": ["plan"], "fn": branch,
+         "scatter": {"over": "plan.chunks"}},
+        {"step": "left", "deps": ["plan"], "fn": lambda ctx: {
+            "n": len(ctx.inputs["plan"]["chunks"])}},
+        {"step": "join", "deps": ["seg", "left"], "fn": lambda ctx: {
+            "segs": len(ctx.inputs["seg"])}},
+    ]}
+
+    def run(max_workers):
+        fabric = Fabric(time_scale=0.0)
+        for i in range(3):
+            fabric.add_site(f"s{i}", devices=list(range(2)))
+        for a, b in (("s0", "s1"), ("s0", "s2"), ("s1", "s2")):
+            fabric.connect(a, b, gbps=1.0, latency_ms=10.0)
+        bus = EventBus()
+        sub = bus.subscribe(maxlen=4096)
+        wf = Workflow("fanout-bench",
+                      planner=PlacementPlanner(FederatedStore(fabric)),
+                      bus=bus)
+        t0 = time.perf_counter()
+        out = GraphRunner(wf, graph, max_workers=max_workers).run()
+        makespan = time.perf_counter() - t0
+        assert out["join"]["segs"] == width
+        sites = {e.data["site"] for e in sub.poll()
+                 if e.kind == "branch" and e.data.get("status") == "done"}
+        return makespan, len(sites)
+
+    serial, _ = run(1)
+    conc, n_sites = run(8)
+    ratio = conc / serial
+    row("workflow_fanout_serial", serial / width * 1e6,
+        f"makespan_s={serial:.2f}",
+        makespan_s=round(serial, 3), width=width)
+    row("workflow_fanout_concurrent", conc / width * 1e6,
+        f"makespan_s={conc:.2f};ratio={ratio:.2f};sites={n_sites}",
+        makespan_s=round(conc, 3), width=width,
+        fanout_ratio=round(ratio, 3), branch_sites=n_sites)
+
+
 def bench_vcluster_fairness(fast: bool):
     """Multi-tenant fair share (paper §I contribution 4, §IV).
 
@@ -510,6 +582,7 @@ BENCHES = [
     ("serve", lambda fast: bench_serve(fast)),
     ("elastic_churn", lambda fast: bench_elastic_churn(fast)),
     ("fabric_placement", lambda fast: bench_fabric_placement(fast)),
+    ("workflow_fanout", lambda fast: bench_workflow_fanout(fast)),
     ("vcluster_fairness", lambda fast: bench_vcluster_fairness(fast)),
     ("scenarios", lambda fast: bench_scenarios(fast)),
 ]

@@ -377,9 +377,13 @@ class WorkflowRun(WorkloadResource):
     """A measured, resumable step DAG (routes to
     ``repro.core.workflow.Workflow`` on the session's backend).
 
-    Steps arrive either as a runtime ``define(wf, **params)`` callable
-    (excluded from manifests) or declaratively via ``entrypoint`` — e.g.
-    ``"repro.apps.connect.pipeline:add_connect_steps"``."""
+    Steps arrive as a runtime ``define(wf, **params)`` callable (excluded
+    from manifests), declaratively via ``entrypoint`` — e.g.
+    ``"repro.apps.connect.pipeline:add_connect_steps"`` — or as a
+    workflow *program*: a declarative ``graph`` of nodes with deps /
+    ``when:`` conditionals / ``repeat:`` loops / ``scatter:`` fan-out /
+    nested subworkflows, compiled and run concurrently by ``repro.flow``
+    (``max_workers`` bounds the branch pool)."""
 
     KIND: ClassVar[str] = "WorkflowRun"
 
@@ -389,15 +393,30 @@ class WorkflowRun(WorkloadResource):
     only: Optional[str] = None          # run a single step in isolation
     entrypoint: Optional[str] = None
     params: Optional[Dict[str, Any]] = None
+    graph: Optional[Dict[str, Any]] = None
+    max_workers: int = 8                # graph mode: branch pool bound
     define: Optional[Callable] = _runtime_field()
 
     def __post_init__(self):
-        self._canonicalize("params")
+        self._canonicalize("params", "graph")
         _require(bool(self.name), "must be a non-empty string",
                  "metadata.name")
         if self.entrypoint is not None:
             _require(":" in self.entrypoint,
                      "must look like 'pkg.module:attr'", "spec.entrypoint")
+        _require(isinstance(self.max_workers, int) and
+                 not isinstance(self.max_workers, bool) and
+                 self.max_workers >= 1,
+                 "must be an integer >= 1", "spec.max_workers")
+        if self.graph is not None:
+            _require(self.entrypoint is None and self.define is None,
+                     "a graph workflow cannot also set entrypoint/define",
+                     "spec.graph")
+            # eager shape validation: bad graphs fail at apply time with
+            # a field-naming ManifestError, not mid-run (lazy import —
+            # repro.flow imports resolve_entrypoint from this module)
+            from repro.flow.spec import validate_graph
+            validate_graph(self.graph, field="spec.graph")
 
     def resolve_define(self) -> Callable:
         if self.define is not None:

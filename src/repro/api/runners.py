@@ -159,12 +159,22 @@ def _watch_job(handle: Handle, cluster, job, *, poll_s: float = 0.01,
 
 
 def _run_workflow(handle: Handle, run: WorkflowRun, wf: Workflow):
-    define = run.resolve_define()
-    define(wf)
     handle.probe("steps_done", lambda: len(wf.reports))
-    handle._transition(WorkloadState.RUNNING, steps=len(wf.steps))
-    results = wf.run(resume=run.resume, only=run.only,
-                     should_stop=handle.should_stop)
+    if run.graph is not None:
+        # workflow program: compile the declarative graph and run ready
+        # branches concurrently over the backend (repro.flow)
+        from repro.flow import GraphRunner
+        runner = GraphRunner(wf, run.graph, max_workers=run.max_workers)
+        handle._transition(WorkloadState.RUNNING, mode="graph",
+                           steps=runner.program.size)
+        results = runner.run(resume=run.resume, only=run.only,
+                             should_stop=handle.should_stop)
+    else:
+        define = run.resolve_define()
+        define(wf)
+        handle._transition(WorkloadState.RUNNING, steps=len(wf.steps))
+        results = wf.run(resume=run.resume, only=run.only,
+                         should_stop=handle.should_stop)
     return {"results": results, "reports": wf.reports,
             "table": wf.table_one()}
 

@@ -18,7 +18,7 @@ is resumable and measured (wf.table_one() == the paper's Table I).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional
 
 import jax
@@ -98,7 +98,10 @@ def step_download(ctx: StepCtx, cc: ConnectConfig):
 # ---------------------------------------------------------------------------
 
 def step_train(ctx: StepCtx, cc: ConnectConfig):
-    key0 = volumes.chunk_keys(cc.n_chunks)[0]
+    return _train_ffn(ctx, cc, volumes.chunk_keys(cc.n_chunks)[0])
+
+
+def _train_ffn(ctx: StepCtx, cc: ConnectConfig, key0: str):
     ivt = ctx.store.get_array(f"{key0}/ivt.npy")
     labels = ctx.store.get_array(f"{key0}/labels.npy")
     subs = volumes.subvolumes(ivt, labels, cc.ffn.fov,
@@ -159,39 +162,47 @@ def _load_ffn_params(store: ObjectStore, cc: ConnectConfig):
 # step 3: distributed inference (paper: 50 GPUs, queue of data shards)
 # ---------------------------------------------------------------------------
 
+def _ffn_infer(cc: ConnectConfig, params):
+    @jax.jit
+    def infer(x):   # x (B,ft,fy,fx)
+        return jax.nn.sigmoid(ffn3d.flood_fill(cc.ffn, params, x)) > 0.5
+    return infer
+
+
+def _chunk_mask(ctx: StepCtx, cc: ConnectConfig, infer, key: str) -> int:
+    """Segment ONE IVT chunk: tile into FOV windows (stride = fov, no
+    overlap), flood-fill each, write the mask.  Returns voxels masked."""
+    ft, fy, fx = cc.ffn.fov
+    ivt = ctx.store.get_array(f"{key}/ivt.npy")
+    T, LA, LO = ivt.shape
+    tiles, coords = [], []
+    for t in range(0, T - ft + 1, ft):
+        for y in range(0, LA - fy + 1, fy):
+            for x in range(0, LO - fx + 1, fx):
+                tiles.append(ivt[t:t + ft, y:y + fy, x:x + fx])
+                coords.append((t, y, x))
+    mask = np.zeros_like(ivt, dtype=np.uint8)
+    bs = 8
+    for i in range(0, len(tiles), bs):
+        batch = np.stack(tiles[i:i + bs])
+        pred = np.asarray(infer(jnp.asarray(batch)))
+        for j, (t, y, x) in enumerate(coords[i:i + bs]):
+            mask[t:t + ft, y:y + fy, x:x + fx] = pred[j]
+    ctx.store.put_array(f"{key}/mask.npy", mask)
+    ctx.metrics.inc("inference/voxels", mask.size)
+    return int(mask.size)
+
+
 def step_inference(ctx: StepCtx, cc: ConnectConfig):
     params = _load_ffn_params(ctx.store, cc)
     keys = volumes.chunk_keys(cc.n_chunks)
     queue = WorkQueue(list(keys), lease_timeout=300.0)
-    ft, fy, fx = cc.ffn.fov
-
-    @jax.jit
-    def infer(x):   # x (B,ft,fy,fx)
-        return jax.nn.sigmoid(ffn3d.flood_fill(cc.ffn, params, x)) > 0.5
-
+    infer = _ffn_infer(cc, params)
     t0 = time.perf_counter()
     voxels = {"n": 0}
 
     def run_chunk(key):
-        ivt = ctx.store.get_array(f"{key}/ivt.npy")
-        T, LA, LO = ivt.shape
-        # tile the volume into FOV windows (stride = fov, no overlap)
-        tiles, coords = [], []
-        for t in range(0, T - ft + 1, ft):
-            for y in range(0, LA - fy + 1, fy):
-                for x in range(0, LO - fx + 1, fx):
-                    tiles.append(ivt[t:t + ft, y:y + fy, x:x + fx])
-                    coords.append((t, y, x))
-        mask = np.zeros_like(ivt, dtype=np.uint8)
-        bs = 8
-        for i in range(0, len(tiles), bs):
-            batch = np.stack(tiles[i:i + bs])
-            pred = np.asarray(infer(jnp.asarray(batch)))
-            for j, (t, y, x) in enumerate(coords[i:i + bs]):
-                mask[t:t + ft, y:y + fy, x:x + fx] = pred[j]
-        ctx.store.put_array(f"{key}/mask.npy", mask)
-        voxels["n"] += int(mask.size)
-        ctx.metrics.inc("inference/voxels", mask.size)
+        voxels["n"] += _chunk_mask(ctx, cc, infer, key)
         return key
 
     done = run_workers(queue, run_chunk, cc.inference_workers, name="infer")
@@ -208,15 +219,19 @@ def step_inference(ctx: StepCtx, cc: ConnectConfig):
 # ---------------------------------------------------------------------------
 
 def step_analyze(ctx: StepCtx, cc: ConnectConfig):
+    return _analyze_keys(ctx, volumes.chunk_keys(cc.n_chunks))
+
+
+def _analyze_keys(ctx: StepCtx, keys: List[str]):
     all_stats = []
-    for key in volumes.chunk_keys(cc.n_chunks):
+    for key in keys:
         mask = ctx.store.get_array(f"{key}/mask.npy")
         labels = np.asarray(segment.connect_label(jnp.asarray(mask)))
         stats = segment.object_stats(labels)
         ctx.store.put_json(f"{key}/objects.json", stats)
         all_stats.extend(stats)
     ctx.report.data_processed_bytes = sum(
-        ctx.store.size(f"{k}/mask.npy") for k in volumes.chunk_keys(cc.n_chunks))
+        ctx.store.size(f"{k}/mask.npy") for k in keys)
     n_obj = len(all_stats)
     ctx.metrics.gauge("analyze/objects", n_obj)
     longest = max((s["duration"] for s in all_stats), default=0)
@@ -235,13 +250,19 @@ def dataset_keys(cc: ConnectConfig) -> Dict[str, List[str]]:
             "model": ["models/ffn/*"]}
 
 
+def _tupled(d: dict) -> dict:
+    """JSON round-trips turn tuple fields (``fov``) into lists; restore
+    tuples so dataclass configs hash/compare/unpack as designed."""
+    return {k: tuple(v) if isinstance(v, list) else v for k, v in d.items()}
+
+
 def connect_config(**kw) -> ConnectConfig:
     """ConnectConfig from plain (manifest-shaped) kwargs: nested ``vol``
     / ``ffn`` dicts become their dataclasses."""
     if isinstance(kw.get("vol"), dict):
-        kw["vol"] = volumes.VolumeSpec(**kw["vol"])
+        kw["vol"] = volumes.VolumeSpec(**_tupled(kw["vol"]))
     if isinstance(kw.get("ffn"), dict):
-        kw["ffn"] = ffn3d.FFNConfig(**kw["ffn"])
+        kw["ffn"] = ffn3d.FFNConfig(**_tupled(kw["ffn"]))
     return ConnectConfig(**kw)
 
 
@@ -269,6 +290,84 @@ def add_connect_steps(wf: Workflow, cc=None, **kw) -> Workflow:
     wf.add(Step("analyze", lambda ctx: step_analyze(ctx, cc),
                 deps=["inference"], inputs=ds["masks"]))
     return wf
+
+
+# ---------------------------------------------------------------------------
+# CONNECT as a workflow *program* (repro.flow): scatter the chunks, place
+# each fetch/segment branch at its own site, gather for analysis.
+# ---------------------------------------------------------------------------
+
+def _cc_of(inputs) -> ConnectConfig:
+    """Every graph node downstream of ``plan`` reads the run's config
+    from plan's output manifest — one source of truth, JSON round-trip
+    safe (resume reloads it from the store)."""
+    return connect_config(**inputs["plan"]["cc"])
+
+
+def g_plan(ctx: StepCtx, **kw):
+    cc = connect_config(**kw)
+    return {"chunks": volumes.chunk_keys(cc.n_chunks), "cc": asdict(cc)}
+
+
+def g_fetch(ctx: StepCtx):
+    """One scatter branch of the download: synthesize ONE IVT chunk at
+    whichever site the planner placed this branch (THREDDS mirror
+    analogue — the data homes where it lands)."""
+    cc = _cc_of(ctx.inputs)
+    cid, key = ctx.inputs["index"], ctx.inputs["item"]
+    ivt, labels = volumes.generate_chunk(cc.vol, cid)
+    n = ctx.store.put_array(f"{key}/ivt.npy", ivt)
+    n += ctx.store.put_array(f"{key}/labels.npy", labels)
+    ctx.metrics.inc("download/bytes", n)
+    ctx.report.data_processed_bytes = n
+    return {"chunk": key, "bytes": n}
+
+
+def g_train(ctx: StepCtx):
+    cc = _cc_of(ctx.inputs)
+    return _train_ffn(ctx, cc, ctx.inputs["plan"]["chunks"][0])
+
+
+def g_segment(ctx: StepCtx):
+    """One scatter branch of distributed inference: flood-fill ONE chunk
+    (paper's 50-GPU fan-out, here one placed step per chunk)."""
+    cc = _cc_of(ctx.inputs)
+    params = _load_ffn_params(ctx.store, cc)
+    key = ctx.inputs["item"]
+    voxels = _chunk_mask(ctx, cc, _ffn_infer(cc, params), key)
+    ctx.report.devices = 1
+    ctx.report.data_processed_bytes = voxels * 4
+    return {"chunk": key, "voxels": voxels}
+
+
+def g_analyze(ctx: StepCtx):
+    return _analyze_keys(ctx, ctx.inputs["plan"]["chunks"])
+
+
+def connect_graph(**kw) -> dict:
+    """The CONNECT pipeline as a five-node declarative workflow program
+    (the ``WorkflowRun.spec.graph`` shape): plan -> fetch (scatter over
+    chunks) -> train -> segment (scatter over chunks, placed at the
+    data) -> analyze (gather).  ``kw`` are ``connect_config`` fields and
+    ride in plan's params."""
+    ep = "repro.apps.connect.pipeline"
+    return {"nodes": [
+        {"step": "plan", "entrypoint": f"{ep}:g_plan", "params": kw},
+        {"step": "fetch", "deps": ["plan"], "entrypoint": f"{ep}:g_fetch",
+         "scatter": {"over": "plan.chunks"},
+         "outputs": ["{item}/ivt.npy", "{item}/labels.npy"]},
+        {"step": "train", "deps": ["plan", "fetch"],
+         "entrypoint": f"{ep}:g_train",
+         "inputs": ["merra/ivt/chunk_00000/*"],
+         "outputs": ["models/ffn/*"]},
+        {"step": "segment", "deps": ["plan", "train"],
+         "entrypoint": f"{ep}:g_segment",
+         "scatter": {"over": "plan.chunks"},
+         "inputs": ["{item}/ivt.npy", "models/ffn/*"],
+         "outputs": ["{item}/mask.npy"]},
+        {"step": "analyze", "deps": ["plan", "segment"],
+         "entrypoint": f"{ep}:g_analyze"},
+    ]}
 
 
 def build_workflow(cluster: Optional[Cluster] = None,

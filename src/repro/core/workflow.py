@@ -28,10 +28,11 @@ step report gains ``site``, ``bytes_moved`` and ``transfer_s`` columns.
 from __future__ import annotations
 
 import json
+import threading
 import time
 import traceback
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.metrics import Registry, StepReport, table_one
 from repro.core.orchestrator import Cluster, JobSpec
@@ -94,6 +95,13 @@ class Workflow:
         self.steps: Dict[str, Step] = {}
         self.reports: List[StepReport] = []
         self.results: Dict[str, Any] = {}
+        # the graph executor (repro.flow) runs steps from a worker pool:
+        # shared mutable state appends under _lock, placement decisions
+        # serialize under _place_lock (the planner's scoring + its
+        # round-robin cursor are cheap; the staging transfers they
+        # trigger still overlap)
+        self._lock = threading.RLock()
+        self._place_lock = threading.Lock()
 
     # control-plane reads/writes work in both modes: a plain ObjectStore,
     # or the federated catalog (whole-namespace view)
@@ -143,82 +151,155 @@ class Workflow:
         ``repro.api`` Handle's cancel signal) is polled at every step
         boundary: when it goes true the workflow stops cleanly — steps
         already completed keep their markers, so a later ``run`` resumes
-        from exactly here."""
-        for step in self._topo_order():
+        from exactly here.  The cancel is reported as one workflow-level
+        ``cancelled`` event plus a ``skipped(reason=cancelled)`` step
+        event for EVERY step that will not run — downstream steps that
+        were never reached included."""
+        order = self._topo_order()
+        for i, step in enumerate(order):
             if should_stop is not None and should_stop():
-                self._emit(step.name, "cancelled")
+                remaining = [s.name for s in order[i:]
+                             if only is None or s.name == only]
+                self._emit_workflow("cancelled", remaining=len(remaining))
+                for name in remaining:
+                    self._emit(name, "skipped", reason="cancelled")
                 break
             if only is not None and step.name != only:
                 # still load completed deps' outputs for the isolated step
                 if self._ctrl().exists(step.marker_key(self.name)):
-                    self.results[step.name] = json.loads(
-                        self._ctrl().get(step.output_key(self.name)))
+                    self.results[step.name] = self._load_output(step)
                 continue
             self._run_step(step, resume)
         return dict(self.results)
 
+    def _load_output(self, step: Step):
+        """A completed step's stored output manifest.  The marker alone
+        does not prove the manifest survived (a partially-synced or
+        hand-pruned store): missing/corrupt outputs fail HERE, naming
+        the step, not as a KeyError inside a downstream consumer."""
+        key = step.output_key(self.name)
+        ctrl = self._ctrl()
+        if not ctrl.exists(key):
+            raise RuntimeError(
+                f"workflow {self.name!r}: step {step.name!r} has a "
+                f"completion marker but its output manifest {key!r} is "
+                f"missing from the store; re-run with resume=False (or "
+                f"wf.reset()) to re-execute it")
+        try:
+            return json.loads(ctrl.get(key))
+        except (ValueError, OSError) as e:
+            raise RuntimeError(
+                f"workflow {self.name!r}: step {step.name!r} output "
+                f"manifest {key!r} is unreadable ({e}); re-run with "
+                f"resume=False to re-execute it") from e
+
     def _place(self, step: Step):
         """Federated mode: choose the step's site, pre-stage its missing
-        inputs, and return (cluster, store_view, placement)."""
-        placement = self.planner.place(
-            step.inputs, devices=step.devices_per_pod * max(1, step.pods))
+        inputs, and return (cluster, store_view, placement, staged
+        (bytes, sim_s)).  Scoring serializes under ``_place_lock`` (the
+        planner's round-robin cursor and queue-depth reads are not
+        atomic); the staging transfers themselves overlap freely."""
+        with self._place_lock:
+            placement = self.planner.place(
+                step.inputs,
+                devices=step.devices_per_pod * max(1, step.pods))
         site = self.planner.fabric.sites[placement.site]
-        if self.namespace not in site.cluster.namespaces:
-            site.cluster.create_namespace(self.namespace)
-        self.planner.prestage(step.inputs, placement.site)
-        return site.cluster, self.planner.fed.view(placement.site), placement
+        with self._lock:
+            if self.namespace not in site.cluster.namespaces:
+                site.cluster.create_namespace(self.namespace)
+        staged = self.planner.prestage(step.inputs, placement.site)
+        # reserve the slot so CONCURRENT placements (repro.flow branches,
+        # which run pods=1 fns inline and never show up in queue_depth)
+        # see this site as loaded; _exec_step releases it when done
+        self.planner.reserve(placement.site)
+        return (site.cluster, self.planner.fed.view(placement.site),
+                placement, staged)
 
-    def _emit(self, step: str, status: str, **data) -> None:
+    def _emit(self, step: str, status: str, *, kind: str = "step",
+              **data) -> None:
         if self.bus is not None:
-            self.bus.publish("step", source=self.name, step=step,
+            self.bus.publish(kind, source=self.name, step=step,
                              status=status, **data)
 
+    def _emit_workflow(self, status: str, **data) -> None:
+        """A workflow-level lifecycle event (kind ``workflow``)."""
+        if self.bus is not None:
+            self.bus.publish("workflow", source=self.name, status=status,
+                             **data)
+
     def _run_step(self, step: Step, resume: bool) -> None:
+        for d in step.deps:
+            if d not in self.results:
+                raise RuntimeError(
+                    f"workflow {self.name!r}: step {step.name!r} depends "
+                    f"on {d!r}, which has not completed (running with "
+                    f"only={step.name!r}? run the dependency first)")
+        out, _ = self._exec_step(
+            step, {d: self.results[d] for d in step.deps}, resume)
+        self.results[step.name] = out
+
+    def _exec_step(self, step: Step, inputs: Dict[str, Any],
+                   resume: bool, *, emit_kind: str = "step",
+                   concurrent: bool = False,
+                   **emit_extra) -> Tuple[Any, bool]:
+        """Execute ONE step against explicit ``inputs`` and return
+        ``(output, skipped)``.  This is the unit both executors share:
+        the serial ``run`` loop above, and the concurrent graph executor
+        (``repro.flow``), which calls it from pool threads —
+        ``concurrent=True`` attributes data movement from the step's own
+        staging result instead of fabric-meter deltas (globals deltas
+        would cross-count parallel steps' transfers)."""
         marker = step.marker_key(self.name)
         if resume and self._ctrl().exists(marker):
-            self.results[step.name] = json.loads(
-                self._ctrl().get(step.output_key(self.name)))
+            out = self._load_output(step)
             self.metrics.inc(f"workflow/{self.name}/{step.name}/skipped")
-            self._emit(step.name, "skipped")
-            return
+            self._emit(step.name, "skipped", kind=emit_kind, **emit_extra)
+            return out, True
 
         report = StepReport(step=step.name, pods=step.pods,
                             cpus=step.pods,
                             devices=step.pods * step.devices_per_pod)
+        staged = (0, 0.0)
         if self.planner is not None:
             # snapshot the FABRIC meters (not self.metrics, which a caller
             # may have overridden) so pre-staging AND any on-demand
             # pull-through reads inside the step are attributed to it
             fmetrics = self.planner.fabric.metrics
-            moved0 = fmetrics.series("fabric/bytes_moved").total
-            sim0 = fmetrics.series("fabric/transfer_s").total
-            cluster, store, placement = self._place(step)
+            if not concurrent:
+                moved0 = fmetrics.series("fabric/bytes_moved").total
+                sim0 = fmetrics.series("fabric/transfer_s").total
+            cluster, store, placement, staged = self._place(step)
             report.site = placement.site
             if placement.migrated:
                 report.extra["migrated"] = 1.0
                 fmetrics.inc("fabric/migrations")
         else:
             cluster, store, placement = self.cluster, self.store, None
-        self._emit(step.name, "placed",
+        self._emit(step.name, "placed", kind=emit_kind,
                    site=placement.site if placement else "local",
-                   mode=placement.mode if placement else "local")
+                   mode=placement.mode if placement else "local",
+                   **emit_extra)
         ctx = StepCtx(cluster=cluster, store=store,
                       metrics=self.metrics, namespace=self.namespace,
-                      inputs={d: self.results[d] for d in step.deps},
-                      report=report)
+                      inputs=inputs, report=report)
         t0 = time.perf_counter()
-        with self.metrics.timer(f"workflow/{self.name}/{step.name}/time_s"):
-            if step.pods <= 1:
-                out = step.fn(ctx)
-            else:
-                # gang of pods; the step fn coordinates via a WorkQueue
-                job = cluster.submit(self.namespace, JobSpec(
-                    name=f"{self.name}-{step.name}", fn=lambda pc: step.fn(ctx),
-                    replicas=1, devices_per_pod=step.devices_per_pod))
-                cluster.wait(job)
-                out = job.results()[0]
+        try:
+            with self.metrics.timer(
+                    f"workflow/{self.name}/{step.name}/time_s"):
+                if step.pods <= 1:
+                    out = step.fn(ctx)
+                else:
+                    # gang of pods; the step fn coordinates via a WorkQueue
+                    job = cluster.submit(self.namespace, JobSpec(
+                        name=f"{self.name}-{step.name}",
+                        fn=lambda pc: step.fn(ctx),
+                        replicas=1, devices_per_pod=step.devices_per_pod))
+                    cluster.wait(job)
+                    out = job.results()[0]
+        finally:
+            if placement is not None:
+                self.planner.release(placement.site)
         report.total_time_s = time.perf_counter() - t0
-        self.results[step.name] = out
 
         store.put(step.output_key(self.name),
                   json.dumps(out, default=str).encode())
@@ -236,14 +317,22 @@ class Workflow:
                 if not self.planner.fed.exists(key):   # declared, not written
                     self.metrics.inc(f"workflow/{self.name}/{step.name}"
                                      f"/missing_output")
-            report.extra["bytes_moved"] = \
-                fmetrics.series("fabric/bytes_moved").total - moved0
-            report.extra["transfer_s"] = \
-                fmetrics.series("fabric/transfer_s").total - sim0
-        self.reports.append(report)
-        self._emit(step.name, "done", site=report.site or "local",
+            if concurrent:
+                report.extra["bytes_moved"] = float(staged[0])
+                report.extra["transfer_s"] = float(staged[1])
+            else:
+                report.extra["bytes_moved"] = \
+                    fmetrics.series("fabric/bytes_moved").total - moved0
+                report.extra["transfer_s"] = \
+                    fmetrics.series("fabric/transfer_s").total - sim0
+        with self._lock:
+            self.reports.append(report)
+        self._emit(step.name, "done", kind=emit_kind,
+                   site=report.site or "local",
                    seconds=round(report.total_time_s, 4),
-                   bytes_moved=int(report.extra.get("bytes_moved", 0)))
+                   bytes_moved=int(report.extra.get("bytes_moved", 0)),
+                   **emit_extra)
+        return out, False
 
     # ------------------------------------------------------------- reporting
     def table_one(self) -> str:

@@ -22,6 +22,7 @@ pull-through reads keep it *correct*; the meters show what it costs
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -58,6 +59,33 @@ class PlacementPlanner:
         self.data_blind = data_blind
         self.tenant = tenant
         self._rr = 0                     # data-blind round-robin cursor
+        # steps placed but not yet finished (reserve/release): inline
+        # steps (pods=1, no cluster submission) are otherwise invisible
+        # to queue_depth, so concurrent branches would all pile onto the
+        # same tie-broken site
+        self._inflight: Dict[str, int] = {}
+        self._inflight_lock = threading.Lock()
+
+    # ------------------------------------------------------------- in-flight
+    def reserve(self, site: str) -> None:
+        """Record a step placed at ``site`` but not yet finished."""
+        with self._inflight_lock:
+            self._inflight[site] = self._inflight.get(site, 0) + 1
+
+    def release(self, site: str) -> None:
+        with self._inflight_lock:
+            n = self._inflight.get(site, 0) - 1
+            if n > 0:
+                self._inflight[site] = n
+            else:
+                self._inflight.pop(site, None)
+
+    def load(self, site: Site) -> int:
+        """Pending work at a site: cluster queue depth plus placed-but-
+        unfinished steps this planner is tracking."""
+        with self._inflight_lock:
+            inflight = self._inflight.get(site.name, 0)
+        return site.queue_depth() + inflight
 
     # -------------------------------------------------------------- scoring
     def expand(self, inputs: Sequence[str]) -> List[str]:
@@ -102,7 +130,7 @@ class PlacementPlanner:
 
     def score(self, keys: Sequence[str], site: Site) -> float:
         _, est_s = self.bytes_missing(keys, site.name)
-        return est_s + self.queue_cost_s * site.queue_depth()
+        return est_s + self.queue_cost_s * self.load(site)
 
     # ------------------------------------------------------------ placement
     def candidates(self, devices: int = 0) -> List[Site]:
@@ -123,7 +151,7 @@ class PlacementPlanner:
         sites = list(self.fabric.sites.values())
         stats = {s.name: self.bytes_missing(keys, s.name) for s in sites}
         scores = {s.name: stats[s.name][1] +
-                  self.queue_cost_s * s.queue_depth() for s in sites}
+                  self.queue_cost_s * self.load(s) for s in sites}
         # the data home: where this step WOULD run were every site healthy
         # (dead sites' replicas count; ties broken toward raw device
         # count) — if the home cannot host it now, this placement is a

@@ -10,7 +10,12 @@ shared fabric as typed, timestamped events:
   * ``node``     — node churn: fail / join (orchestrator churn watchers);
   * ``transfer`` — metered cross-site byte movements (fabric watchers);
   * ``metric``   — selected throughput gauges (Registry listeners);
-  * ``step``     — workflow step placed / done / skipped.
+  * ``step``     — workflow step placed / done / skipped / scatter;
+  * ``branch``   — workflow-program branch lifecycle: one event per
+                   scatter shard or repeat iteration (``of=<step>``,
+                   ``branch=<index>``), from ``repro.flow``;
+  * ``workflow`` — workflow-level lifecycle (e.g. ``cancelled`` with the
+                   count of steps that will not run).
 
 Delivery is synchronous fan-out into per-subscriber bounded deques: a
 publisher appends and signals, a subscriber drains with ``poll``.  Lag is
@@ -37,7 +42,8 @@ class Event:
     """One monitoring event: a kind, an origin, and a payload."""
     seq: int                    # bus-global, gap-free ordering
     ts: float                   # publish wall-clock time
-    kind: str                   # sched | pod | node | transfer | metric | step
+    kind: str       # sched | pod | node | transfer | metric | step |
+                    # branch | workflow
     source: str                 # site / component / tenant that emitted it
     data: Mapping[str, Any] = field(default_factory=dict)
 

@@ -79,6 +79,22 @@ def test_scenario_bench_is_committed():
                 "steps_lost", "chargeback_usd"} <= set(r)
 
 
+def test_workflow_bench_is_committed():
+    """ISSUE 8 acceptance: BENCH_workflow.json shows the concurrent
+    fan-out (width >= 8, branches spread over 3 sites) finishing in
+    < 0.6x the serial makespan."""
+    path = ROOT / "BENCH_workflow.json"
+    assert path.exists(), "BENCH_workflow.json must be committed"
+    doc = json.loads(path.read_text())
+    rows = {r["name"]: r for r in doc["rows"]}
+    serial = rows["workflow_fanout_serial"]
+    conc = rows["workflow_fanout_concurrent"]
+    assert serial["width"] >= 8 and conc["width"] == serial["width"]
+    assert conc["branch_sites"] >= 3
+    assert conc["makespan_s"] < 0.6 * serial["makespan_s"]
+    assert conc["fanout_ratio"] < 0.6
+
+
 @pytest.mark.parametrize("path", committed_bench_files(),
                          ids=lambda p: p.name)
 def test_committed_bench_json_validates(path):

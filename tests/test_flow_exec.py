@@ -1,0 +1,250 @@
+"""Concurrent graph execution on the federated fabric (repro.flow).
+
+The acceptance properties of the workflow-program subsystem: a
+diamond-with-fan-out graph on a 3-site fabric runs independent branches
+concurrently; killing the run mid-fan-out strands only the unfinished
+branches (their markers never appear) and a re-run resumes EXACTLY the
+missing ones — verified through step markers and EventBus events; plus
+when:/repeat:/subworkflow/only= semantics end to end."""
+import threading
+import time
+
+import pytest
+
+from repro.core.workflow import Workflow
+from repro.fabric import Fabric, FederatedStore, PlacementPlanner
+from repro.flow import GraphRunner
+from repro.vcluster.monitor import EventBus
+
+WIDTH = 8
+
+
+def mk_fabric(tmp_path, tag, devs=(2, 2, 2)):
+    fabric = Fabric(time_scale=0.0)
+    for i, n in enumerate(devs):
+        fabric.add_site(f"s{i}", devices=list(range(n)),
+                        store_root=str(tmp_path / f"{tag}-s{i}"))
+    names = list(fabric.sites)
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            fabric.connect(a, b, gbps=1.0, latency_ms=10.0)
+    return fabric
+
+
+def mk_wf(fed, bus=None):
+    return Workflow("g", planner=PlacementPlanner(fed), bus=bus)
+
+
+def plan(ctx, n=WIDTH):
+    return {"chunks": [f"c{i}" for i in range(n)]}
+
+
+def diamond(work_fn, left_fn=None):
+    """plan -> (scatter seg, left) -> join: the diamond with fan-out."""
+    return {"nodes": [
+        {"step": "plan", "fn": plan},
+        {"step": "seg", "deps": ["plan"], "fn": work_fn,
+         "scatter": {"over": "plan.chunks"}},
+        {"step": "left", "deps": ["plan"],
+         "fn": left_fn or (lambda ctx: {"n": len(ctx.inputs["plan"]["chunks"])})},
+        {"step": "join", "deps": ["seg", "left"],
+         "fn": lambda ctx: {"segs": len(ctx.inputs["seg"]),
+                            "left": ctx.inputs["left"]["n"]}},
+    ]}
+
+
+def test_fanout_runs_branches_concurrently(tmp_path):
+    """With a worker pool, the 8-branch scatter overlaps: peak
+    in-flight > 1 and makespan well under the serial sum."""
+    in_flight = {"now": 0, "peak": 0}
+    lock = threading.Lock()
+
+    def work(ctx):
+        with lock:
+            in_flight["now"] += 1
+            in_flight["peak"] = max(in_flight["peak"], in_flight["now"])
+        time.sleep(0.05)
+        with lock:
+            in_flight["now"] -= 1
+        return {"i": ctx.inputs["index"]}
+
+    fed = FederatedStore(mk_fabric(tmp_path, "conc"))
+    bus = EventBus()
+    sub = bus.subscribe(maxlen=2048)
+    t0 = time.perf_counter()
+    out = GraphRunner(mk_wf(fed, bus), diamond(work), max_workers=8).run()
+    makespan = time.perf_counter() - t0
+    assert out["join"] == {"segs": WIDTH, "left": WIDTH}
+    assert [o["i"] for o in out["seg"]] == list(range(WIDTH))
+    assert in_flight["peak"] > 1, "branches never overlapped"
+    assert makespan < 0.05 * WIDTH, f"no speedup: {makespan:.2f}s"
+    evs = sub.poll()
+    done = [e for e in evs if e.kind == "branch"
+            and e.data.get("status") == "done" and e.data["of"] == "seg"]
+    assert sorted(e.data["branch"] for e in done) == list(range(WIDTH))
+    assert {e.data["site"] for e in done} == {"s0", "s1", "s2"}, \
+        "branches should spread across the 3 sites"
+    scatter = [e for e in evs if e.data.get("status") == "scatter"]
+    assert scatter and scatter[0].data["width"] == WIDTH
+
+
+def test_kill_mid_fanout_resumes_only_missing_branches(tmp_path):
+    """The acceptance regression: cancel once 3 branches have started;
+    finished branches keep their markers, queued ones are revoked, and
+    the re-run executes exactly the complement (verified by markers AND
+    by the branch skipped/done events)."""
+    fed = FederatedStore(mk_fabric(tmp_path, "kill"))
+    started = []
+
+    def work(ctx):
+        started.append(ctx.inputs["index"])
+        time.sleep(0.04)
+        return {"i": ctx.inputs["index"]}
+
+    bus = EventBus()
+    sub = bus.subscribe(maxlen=2048)
+    wf = mk_wf(fed, bus)
+    runner = GraphRunner(wf, diamond(work), max_workers=2)
+    runner.run(should_stop=lambda: len(started) >= 3)
+    evs = sub.poll()
+    assert any(e.kind == "workflow" and e.data["status"] == "cancelled"
+               for e in evs), "no workflow-level cancelled event"
+
+    ctrl = wf._ctrl()
+    done_first = {i for i in range(WIDTH)
+                  if ctrl.exists(f"workflows/g/seg#{i}/_COMPLETE")}
+    assert 0 < len(done_first) < WIDTH, sorted(done_first)
+    assert not ctrl.exists("workflows/g/seg/_COMPLETE"), \
+        "incomplete fan-out must not gather"
+    ev_done = {e.data["branch"] for e in evs if e.kind == "branch"
+               and e.data.get("status") == "done"}
+    assert ev_done == done_first     # events agree with the markers
+
+    # --- re-run (fresh objects over the same fed store) ---
+    ran = []
+
+    def work2(ctx):
+        ran.append(ctx.inputs["index"])
+        return {"i": ctx.inputs["index"]}
+
+    bus2 = EventBus()
+    sub2 = bus2.subscribe(maxlen=2048)
+    out = GraphRunner(mk_wf(fed, bus2), diamond(work2),
+                      max_workers=4).run()
+    assert out["join"]["segs"] == WIDTH
+    assert sorted(ran) == sorted(set(range(WIDTH)) - done_first), \
+        "resume must run ONLY the missing branches"
+    evs2 = sub2.poll()
+    skipped = {e.data["branch"] for e in evs2 if e.kind == "branch"
+               and e.data.get("status") == "skipped"}
+    assert skipped == done_first
+
+    # a third run marker-skips the whole gathered fan-out wholesale
+    ran.clear()
+    out3 = GraphRunner(mk_wf(fed), diamond(work2)).run()
+    assert out3["join"]["segs"] == WIDTH and ran == []
+
+
+def test_failed_branch_fails_run_but_keeps_finished_markers(tmp_path):
+    fed = FederatedStore(mk_fabric(tmp_path, "fail"))
+
+    def work(ctx):
+        if ctx.inputs["index"] == 5:
+            raise ValueError("branch 5 exploded")
+        return {"i": ctx.inputs["index"]}
+
+    with pytest.raises(ValueError, match="branch 5"):
+        GraphRunner(mk_wf(fed), diamond(work), max_workers=3).run()
+    ctrl = fed
+    assert not ctrl.exists("workflows/g/seg#5/_COMPLETE")
+    done = [i for i in range(WIDTH)
+            if ctrl.exists(f"workflows/g/seg#{i}/_COMPLETE")]
+    assert done, "finished branches must keep their markers"
+
+    def fixed(ctx):
+        return {"i": ctx.inputs["index"]}
+
+    out = GraphRunner(mk_wf(fed), diamond(fixed)).run()
+    assert out["join"]["segs"] == WIDTH
+
+
+def test_when_false_skips_node_and_cascades(tmp_path):
+    fed = FederatedStore(mk_fabric(tmp_path, "when"))
+    graph = {"nodes": [
+        {"step": "plan", "fn": plan},
+        {"step": "gated", "deps": ["plan"],
+         "when": f"len(plan.chunks) > {WIDTH}",
+         "fn": lambda ctx: {"ran": True}},
+        {"step": "after", "deps": ["gated"],
+         "fn": lambda ctx: {"ran": True}},
+        {"step": "always", "deps": ["plan"],
+         "when": f"len(plan.chunks) == {WIDTH}",
+         "fn": lambda ctx: {"ran": True}},
+    ]}
+    bus = EventBus()
+    sub = bus.subscribe(maxlen=256)
+    out = GraphRunner(mk_wf(fed, bus), graph).run()
+    assert out["always"]["ran"] and "gated" not in out and "after" not in out
+    reasons = {e.data["step"]: e.data.get("reason") for e in sub.poll()
+               if e.data.get("status") == "skipped"}
+    assert reasons == {"gated": "when", "after": "when-upstream"}
+    # when-skips write no markers: conditions re-evaluate on resume
+    assert not fed.exists("workflows/g/gated/_COMPLETE")
+
+
+def test_repeat_until_iterates_with_markers_and_resumes(tmp_path):
+    fed = FederatedStore(mk_fabric(tmp_path, "loop"))
+    runs = []
+
+    def bump(ctx):
+        prev = ctx.inputs["prev"] or {"v": 0}
+        runs.append(ctx.inputs["i"])
+        return {"v": prev["v"] + 1}
+
+    graph = {"nodes": [
+        {"step": "init", "fn": lambda ctx: {"v": 0}},
+        {"step": "tune", "deps": ["init"], "fn": bump,
+         "repeat": {"until": "output.v >= 3", "max": 10}},
+        {"step": "use", "deps": ["tune"],
+         "fn": lambda ctx: {"got": ctx.inputs["tune"]["v"]}},
+    ]}
+    out = GraphRunner(mk_wf(fed), graph).run()
+    assert out["use"]["got"] == 3 and runs == [0, 1, 2]
+    assert fed.exists("workflows/g/tune#2/_COMPLETE")
+    assert not fed.exists("workflows/g/tune#3/_COMPLETE")
+    # resume: the loop's own marker skips it wholesale
+    out2 = GraphRunner(mk_wf(fed), graph).run()
+    assert out2["use"]["got"] == 3 and runs == [0, 1, 2]
+
+
+def test_nested_subworkflow_flattens_and_collects(tmp_path):
+    fed = FederatedStore(mk_fabric(tmp_path, "sub"))
+    graph = {"nodes": [
+        {"step": "a", "fn": lambda ctx: {"x": 1}},
+        {"step": "sub", "deps": ["a"], "graph": {"nodes": [
+            {"step": "b",
+             "fn": lambda ctx: {"y": ctx.inputs["a"]["x"] + 1}},
+            {"step": "c", "deps": ["b"],
+             "fn": lambda ctx: {"z": ctx.inputs["b"]["y"] * 10}},
+        ]}},
+        {"step": "d", "deps": ["sub"],
+         "fn": lambda ctx: {"f": ctx.inputs["sub"]["c"]["z"]}},
+    ]}
+    out = GraphRunner(mk_wf(fed), graph).run()
+    assert out["d"]["f"] == 20
+    assert out["sub"] == {"b": {"y": 2}, "c": {"z": 20}}
+    assert fed.exists("workflows/g/sub.b/_COMPLETE")
+    # only= reaches INTO the flattened subworkflow (deps from the store)
+    out2 = GraphRunner(mk_wf(fed), graph).run(only="sub.c")
+    assert out2["sub.c"]["z"] == 20
+
+
+def test_only_missing_dep_raises_clear_error(tmp_path):
+    fed = FederatedStore(mk_fabric(tmp_path, "only"))
+    graph = {"nodes": [
+        {"step": "a", "fn": lambda ctx: {"x": 1}},
+        {"step": "b", "deps": ["a"],
+         "fn": lambda ctx: ctx.inputs["a"]},
+    ]}
+    with pytest.raises(RuntimeError, match=r"depends on 'a'"):
+        GraphRunner(mk_wf(fed), graph).run(only="b")

@@ -1,0 +1,176 @@
+"""Graph-spec validation properties for repro.flow.
+
+The contract: every malformed workflow program — dependency cycles,
+unknown dep names, malformed ``scatter:`` / ``repeat:`` specs, unsafe
+condition expressions — fails EAGERLY with a ``ManifestError`` that
+names the offending manifest field, and the safe expression language
+evaluates exactly its whitelisted subset."""
+import pytest
+
+from repro.api import ManifestError, WorkflowRun
+from repro.flow import compile_graph, eval_expr, parse_expr, validate_graph
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+def node(step, **kw):
+    return {"step": step, "entrypoint": "builtins:repr", **kw}
+
+
+def graph(*nodes):
+    return {"nodes": list(nodes)}
+
+
+# ------------------------------------------------------------- properties
+if HAVE_HYPOTHESIS:
+    step_names = st.text(alphabet="abcdefghijklmnopqrstuvwxyz",
+                         min_size=1, max_size=6)
+
+    @given(st.lists(step_names, min_size=2, max_size=6, unique=True),
+           st.data())
+    def test_cycles_always_raise_naming_nodes(names, data):
+        """Close any chain into a ring (possibly with extra forward deps
+        thrown in): validation must always report the cycle at
+        <field>.nodes."""
+        nodes = []
+        for i, n in enumerate(names):
+            deps = [names[(i + 1) % len(names)]]     # the ring edge
+            extra = data.draw(st.lists(
+                st.sampled_from(names), max_size=2, unique=True))
+            deps += [d for d in extra if d not in deps and d != n]
+            nodes.append(node(n, deps=deps))
+        with pytest.raises(ManifestError) as e:
+            validate_graph(graph(*nodes), field="spec.graph")
+        assert e.value.field == "spec.graph.nodes"
+        assert "cycle" in str(e.value)
+
+    @given(step_names, step_names)
+    def test_unknown_deps_always_raise_naming_the_entry(known, ghost):
+        """A dep that names no declared step fails at deps[j] whatever
+        the names are."""
+        if ghost == known:
+            ghost = ghost + "x"
+        bad = graph(node(known), node(known + "y", deps=[known, ghost]))
+        with pytest.raises(ManifestError) as e:
+            validate_graph(bad, field="spec.graph")
+        assert e.value.field == "spec.graph.nodes[1].deps[1]"
+        assert repr(ghost) in str(e.value)
+
+    malformed_scatters = st.one_of(
+        st.just(17), st.just("plan.chunks"), st.just([]),
+        st.just({}), st.just({"over": []}),
+        st.just({"over": "plan.chunks", "width": 4}),
+        st.just({"over": "ghost.chunks"}), st.just({"over": ""}),
+        st.just({"over": 3}))
+
+    @given(malformed_scatters)
+    def test_malformed_scatter_specs_raise_inside_scatter(scatter):
+        bad = graph(node("plan"),
+                    node("fan", deps=["plan"], scatter=scatter))
+        with pytest.raises(ManifestError) as e:
+            validate_graph(bad, field="spec.graph")
+        assert e.value.field.startswith("spec.graph.nodes[1].scatter"), \
+            e.value.field
+
+    @given(st.sampled_from([
+        "__import__('os')", "open('/etc/passwd')", "x.__class__",
+        "(lambda: 1)()", "[i for i in x]", "f'{x}'", "x := 3",
+        "exec('1')", "x ** 9", "{1: 2}"]))
+    def test_unsafe_expressions_never_parse(text):
+        with pytest.raises(ManifestError) as e:
+            parse_expr(text, "spec.graph.nodes[0].when")
+        assert e.value.field == "spec.graph.nodes[0].when"
+
+
+# ------------------------------------------------- deterministic fallbacks
+@pytest.mark.parametrize("bad,field,hint", [
+    (graph(node("a", deps=["b"]), node("b", deps=["a"])),
+     "spec.graph.nodes", "cycle"),
+    (graph(node("a", deps=["a"])), "spec.graph.nodes[0].deps[0]",
+     "cannot depend on itself"),
+    (graph(node("a"), node("b", deps=["ghost"])),
+     "spec.graph.nodes[1].deps[0]", "unknown dependency"),
+    (graph(node("a"), node("b", deps=["a"], scatter={"over": []})),
+     "spec.graph.nodes[1].scatter.over", "may not be empty"),
+    (graph(node("a"), node("b", deps=["a"], scatter={"ovr": "a.x"})),
+     "spec.graph.nodes[1].scatter.ovr", "unknown scatter keys"),
+    (graph(node("a"), node("b", deps=["a"],
+                           scatter={"over": "ghost.chunks"})),
+     "spec.graph.nodes[1].scatter.over", "not in this node's deps"),
+    (graph(node("a"), node("b", deps=["a"], when="ghost.ok")),
+     "spec.graph.nodes[1].when", "not in this node's deps"),
+    (graph(node("a"), node("b", deps=["a"],
+                           repeat={"until": "output.v > 1"})),
+     "spec.graph.nodes[1].repeat.max", "bounded"),
+    (graph(node("a"), node("b", deps=["a"],
+                           repeat={"times": 2, "until": "i > 1",
+                                   "max": 3})),
+     "spec.graph.nodes[1].repeat", "exactly one"),
+    (graph(node("a"), node("b", deps=["a"], scatter={"over": "a.x"},
+                           repeat={"times": 2})),
+     "spec.graph.nodes[1].scatter", "cannot combine"),
+    (graph(node("bad name!")), "spec.graph.nodes[0].step", "must match"),
+    (graph(node("a"), node("a")), "spec.graph.nodes[1].step", "duplicate"),
+    (graph({"step": "a"}), "spec.graph.nodes[0].entrypoint",
+     "exactly one of"),
+    (graph(node("a", when="__import__('os').system('x')")),
+     "spec.graph.nodes[0].when", "may be called"),
+    (graph(node("a", when="[i for i in x]")),
+     "spec.graph.nodes[0].when", "may not contain"),
+    ({"nodes": []}, "spec.graph.nodes", "non-empty"),
+    ({"nodes": [node("a")], "edges": []}, "spec.graph.edges",
+     "unknown graph keys"),
+])
+def test_malformed_graphs_name_the_field(bad, field, hint):
+    with pytest.raises(ManifestError) as e:
+        validate_graph(bad, field="spec.graph")
+    assert e.value.field == field, f"expected {field}, got {e.value.field}"
+    assert hint in str(e.value)
+
+
+def test_workflowrun_validates_graph_eagerly():
+    """A bad graph fails at manifest/spec construction (apply time), and
+    graph excludes entrypoint/define."""
+    with pytest.raises(ManifestError, match=r"spec\.graph\.nodes"):
+        WorkflowRun(name="w", graph=graph(node("a", deps=["a"])))
+    with pytest.raises(ManifestError, match=r"spec\.graph"):
+        WorkflowRun(name="w", graph=graph(node("a")),
+                    entrypoint="builtins:repr")
+    with pytest.raises(ManifestError, match=r"spec\.max_workers"):
+        WorkflowRun(name="w", graph=graph(node("a")), max_workers=0)
+    ok = WorkflowRun(name="w", graph=graph(node("a")))
+    assert ok.to_manifest()["spec"]["graph"]["nodes"][0]["step"] == "a"
+
+
+def test_expression_language_evaluates_safe_subset():
+    ns = {"train": {"loss": 0.07, "hist": [3, 2, 1]}, "i": 4}
+    cases = [("train.loss < 0.1", True),
+             ("train.hist[2] == 1 and not (i > 9)", True),
+             ("len(train.hist) + i == 7", True),
+             ("min(train.hist) <= train.loss", False),
+             ("0 < i <= 4", True)]
+    for text, want in cases:
+        tree = parse_expr(text, "f")
+        assert eval_expr(tree, ns) is want, text
+    with pytest.raises(KeyError, match="ghost"):
+        eval_expr(parse_expr("ghost.x", "f"), ns)
+
+
+def test_compile_resolves_entrypoints_and_nested_graphs():
+    g = graph(
+        node("a"),
+        {"step": "sub", "deps": ["a"],
+         "graph": graph(node("x"), node("y", deps=["x"]))},
+        node("fan", deps=["a"], scatter={"over": "a.items"}),
+        node("loop", deps=["a"], repeat={"until": "output.v > 1",
+                                         "max": 5}))
+    prog = compile_graph(g)
+    assert prog.nodes["a"].fn is repr
+    assert prog.nodes["sub"].subgraph.nodes["y"].deps == ("x",)
+    assert prog.nodes["fan"].scatter_over == "a.items"
+    assert prog.nodes["loop"].repeat.bound == 5
+    assert prog.size == 6

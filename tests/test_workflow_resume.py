@@ -82,6 +82,51 @@ def test_only_with_resume_false_reruns_completed_step(tmp_path):
     assert calls == ["a", "b", "c", "b"]
 
 
+def test_missing_output_manifest_names_the_step(tmp_path):
+    """A marker without its output manifest (partially-synced or
+    hand-pruned store) fails with a clear error naming the step, not a
+    KeyError from inside json.loads / the store."""
+    store = ObjectStore(str(tmp_path))
+    calls = []
+    build(store, calls).run()
+    store.delete("workflows/pipe/a/output.json")    # marker survives
+    with pytest.raises(RuntimeError, match=r"step 'a'.*missing"):
+        build(store, calls).run(only="b")
+    with pytest.raises(RuntimeError, match=r"step 'a'.*missing"):
+        build(store, calls).run()                   # resume path too
+    # corrupt (unreadable) manifests are named the same way
+    store.put("workflows/pipe/a/output.json", b"{not json")
+    with pytest.raises(RuntimeError, match=r"step 'a'.*unreadable"):
+        build(store, calls).run(only="b")
+
+
+def test_cancel_emits_workflow_event_and_skips_remaining(tmp_path):
+    """Cancelling mid-run reports ONE workflow-level ``cancelled`` event
+    plus a ``skipped(reason=cancelled)`` step event for every step that
+    will not run — including downstream steps never reached."""
+    from repro.vcluster.monitor import EventBus
+    store = ObjectStore(str(tmp_path))
+    calls = []
+    bus = EventBus()
+    sub = bus.subscribe(maxlen=256)
+    wf = build(store, calls)
+    wf.bus = bus
+    hits = {"n": 0}
+
+    def stop_after_a():
+        hits["n"] += 1
+        return hits["n"] > 1            # a runs, then the signal trips
+
+    out = wf.run(should_stop=stop_after_a)
+    assert calls == ["a"] and "b" not in out
+    evs = [(e.kind, e.data.get("step"), e.data.get("status"),
+            e.data.get("reason"), e.data.get("remaining"))
+           for e in sub.poll()]
+    assert ("workflow", None, "cancelled", None, 2) in evs
+    assert ("step", "b", "skipped", "cancelled", None) in evs
+    assert ("step", "c", "skipped", "cancelled", None) in evs
+
+
 def test_reset_clears_markers(tmp_path):
     store = ObjectStore(str(tmp_path))
     calls = []
