@@ -70,6 +70,8 @@ KNOWN_EXTRA_KEYS = frozenset({
     "fairshare_skew", "chaos_applied", "windows", "horizon_s",
     "offered", "served", "goodput", "slo_pass",
     "p99_ttft_s", "p99_latency_s", "chargeback_usd",
+    # serving at scale (serving_* rows)
+    "prefix_hit_rate", "scale_events", "replicas_max", "stale_tokens",
 })
 
 
@@ -304,6 +306,102 @@ def bench_serve(fast: bool):
         f"tok_s={c['serve/tok_s']:.1f};"
         f"speedup={c['serve/tok_s'] / max(s['serve/tok_s'], 1e-9):.2f}",
         tok_s=c["serve/tok_s"])
+
+
+def bench_serving_scale(fast: bool):
+    """Serving at scale: static batcher vs an autoscaled paged+prefix
+    replica fleet on shared-prefix, straggler-skewed traffic.
+
+    Every request shares one block-aligned system-prompt head (the radix
+    prefix cache's case) and stop lengths are skewed (one straggler per
+    four requests).  The baseline is the drain-then-refill static
+    batcher; the challenger runs the paged-KV engines behind the
+    session-affine router with the HPA-style autoscaler (1 -> 2
+    replicas off the arrival burst).  Both arms report p99 TTFT measured
+    from ENQUEUE and tok/s counting only acked completions — the two
+    numbers the serving-loop bug burn-down corrected.  Engines are
+    prebuilt+warmed so replica cold-start is process-level, not compile.
+
+    The smoke config is scaled up (2 layers, d_model 256) so a fused
+    decode step carries real device work: on the tiny smoke shapes the
+    host loop dominates and neither continuous batching nor replication
+    can show through.
+    """
+    import dataclasses
+    import threading
+
+    from repro.configs import registry as cfg_registry
+    from repro.core.metrics import Registry
+    from repro.launch.mesh import single_device_mesh
+    from repro.launch.serve import serve_static
+    from repro.serving import GAUGES, ServingEngine, serve_replicated
+
+    arch = "phi4-mini-3.8b"
+    cfg = dataclasses.replace(
+        cfg_registry.get_smoke(arch), num_layers=2, d_model=256, d_ff=512,
+        num_heads=8, num_kv_heads=4, head_dim=32,
+        block_pattern=("attn", "attn"))
+    par = cfg_registry.get_parallel(arch)
+    mesh = single_device_mesh()
+    Pp, G, slots, bs = 16, 32, 4, 8
+    n = 16 if fast else 32
+    rng = np.random.RandomState(0)
+    head = rng.randint(1, cfg.vocab_size, bs).tolist()   # shared system block
+    gens = [G, 2, 2, 2]
+    reqs = [{"id": i, "session": f"user-{i % 4}",
+             "prompt": head + rng.randint(1, cfg.vocab_size, Pp - bs).tolist(),
+             "max_new_tokens": gens[i % len(gens)]}
+            for i in range(n)]
+
+    s_res, s_m = serve_static(arch, smoke=True, n_requests=n, prompt_len=Pp,
+                              gen=G, batch=slots, warmup=True, requests=reqs,
+                              cfg_override=cfg)
+    s_tok = s_m.series(GAUGES.TOK_S).last
+    s_p99 = s_m.series(GAUGES.TTFT_S).percentile(99)
+    row("serving_static", s_m.series(GAUGES.WALL_S).last * 1e6,
+        f"tok_s={s_tok:.1f};p99_ttft={s_p99:.3f}",
+        tok_s=s_tok, p99_ttft_s=s_p99)
+
+    fleet = Registry()
+    prebuilt = [ServingEngine(cfg, par, mesh, num_slots=slots,
+                              prompt_len=Pp, max_new_tokens=G, seed=0,
+                              registry=fleet, paged=True, block_size=bs)
+                for _ in range(2)]
+    with mesh:
+        for e in prebuilt:
+            e.warmup()
+    avail, lock = list(prebuilt), threading.Lock()
+
+    class Pooled:
+        """Checks a prebuilt engine out for one replica lifetime."""
+        def __init__(self):
+            with lock:
+                self.engine = avail.pop()
+
+        def run(self, *a, **kw):
+            try:
+                return self.engine.run(*a, **kw)
+            finally:
+                with lock:
+                    avail.append(self.engine)
+
+    results, m, events = serve_replicated(
+        lambda name, reg: Pooled(), reqs, min_replicas=1, max_replicas=2,
+        target_backlog=2.0, registry=fleet, reconcile_interval=0.01,
+        timeout_s=300.0)
+    assert sorted(results) == list(range(n)), "fleet dropped requests"
+    tok = m.series(GAUGES.TOK_S).last
+    p99 = m.series(GAUGES.TTFT_S).percentile(99)
+    hits = m.series(GAUGES.PREFIX_HITS).total
+    misses = m.series(GAUGES.PREFIX_MISSES).total
+    hit_rate = hits / max(hits + misses, 1.0)
+    row("serving_paged_autoscaled", m.series(GAUGES.WALL_S).last * 1e6,
+        f"tok_s={tok:.1f};p99_ttft={p99:.3f};"
+        f"speedup={tok / max(s_tok, 1e-9):.2f};prefix_hit={hit_rate:.2f}",
+        tok_s=tok, p99_ttft_s=p99, prefix_hit_rate=hit_rate,
+        scale_events=float(len(events)),
+        replicas_max=m.series(GAUGES.REPLICAS).max,
+        stale_tokens=m.series(GAUGES.STALE_TOKENS).total)
 
 
 def bench_elastic_churn(fast: bool):
@@ -580,6 +678,7 @@ BENCHES = [
     ("lm_train", lambda fast: bench_lm_train(fast)),
     ("train_hot_loop", lambda fast: bench_train_hot_loop(fast)),
     ("serve", lambda fast: bench_serve(fast)),
+    ("serving_scale", lambda fast: bench_serving_scale(fast)),
     ("elastic_churn", lambda fast: bench_elastic_churn(fast)),
     ("fabric_placement", lambda fast: bench_fabric_placement(fast)),
     ("workflow_fanout", lambda fast: bench_workflow_fanout(fast)),

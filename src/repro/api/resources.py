@@ -299,6 +299,17 @@ class ServeJob(WorkloadResource):
     # explicit request stream: [{"id": ..., "prompt": [...], ...}, ...]
     requests: Optional[List[Dict[str, Any]]] = None
     site: Optional[str] = None          # tenant/fabric routing
+    # paged KV pool + prefix cache (None = auto when the family supports it)
+    paged: Optional[bool] = None
+    block_size: int = 8
+    pool_blocks: Optional[int] = None
+    prefix_cache: bool = True
+    # multi-replica serving: min==max pins the fleet size; min<max enables
+    # the HPA-style autoscaler (serving.router) between the bounds
+    min_replicas: int = 1
+    max_replicas: int = 1
+    target_backlog: float = 4.0         # autoscaler queue depth / replica
+    ttft_slo_s: Optional[float] = None  # p99 service-TTFT scale-up trigger
 
     def __post_init__(self):
         self._canonicalize("requests")
@@ -309,6 +320,15 @@ class ServeJob(WorkloadResource):
         _require(self.max_new_tokens >= 1, "must be >= 1",
                  "spec.max_new_tokens")
         _require(self.n_requests >= 0, "must be >= 0", "spec.n_requests")
+        _require(self.block_size >= 1, "must be >= 1", "spec.block_size")
+        _require(self.pool_blocks is None or self.pool_blocks >= 2,
+                 "must be >= 2 (one data block + the null block)",
+                 "spec.pool_blocks")
+        _require(1 <= self.min_replicas <= self.max_replicas,
+                 "need 1 <= min_replicas <= max_replicas",
+                 "spec.min_replicas")
+        _require(self.target_backlog > 0, "must be > 0",
+                 "spec.target_backlog")
         if self.gen_lens is not None:
             _require(len(self.gen_lens) > 0 and
                      all(g >= 1 for g in self.gen_lens),

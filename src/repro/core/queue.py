@@ -31,6 +31,7 @@ class _Task:
     worker: Optional[str] = None
     lease_expiry: float = 0.0
     done: bool = False
+    enqueued_at: float = 0.0
 
 
 class WorkQueue:
@@ -50,13 +51,27 @@ class WorkQueue:
             self.put(it)
 
     # ------------------------------------------------------------------ api
-    def put(self, item) -> int:
+    def put(self, item, *, enqueued_at: Optional[float] = None) -> int:
+        """Enqueue an item.  ``enqueued_at`` preserves the original
+        submission time when a router migrates a request between queues
+        (TTFT must charge the full wait, not restart it)."""
         with self._lock:
             tid = self._next_id
             self._next_id += 1
-            self._tasks[tid] = _Task(tid, item)
+            self._tasks[tid] = _Task(
+                tid, item,
+                enqueued_at=self._clock() if enqueued_at is None
+                else enqueued_at)
             self._pending.append(tid)
             return tid
+
+    def enqueued_at(self, task_id: int) -> float:
+        """Submission timestamp (queue clock) — survives lease/nack cycles,
+        so queue wait is measurable from the *first* enqueue even after a
+        preempted attempt requeues the task."""
+        with self._lock:
+            t = self._tasks.get(task_id)
+            return t.enqueued_at if t is not None else 0.0
 
     def _reclaim_expired(self, now: float) -> None:
         expired = [tid for tid, t in self._leased.items()
@@ -159,8 +174,10 @@ class WorkQueue:
                 "next_id": self._next_id,
                 "lease_timeout": self.lease_timeout,
                 "max_attempts": self.max_attempts,
-                "tasks": [(t.task_id, t.item, t.attempts, t.done)
+                "tasks": [(t.task_id, t.item, t.attempts, t.done,
+                           t.enqueued_at)
                           for t in self._tasks.values()],
+                "pending": list(self._pending),
                 "dead": [t.task_id for t in self.dead],
             }
 
@@ -170,13 +187,24 @@ class WorkQueue:
                 max_attempts=snap["max_attempts"], clock=clock)
         q._next_id = snap["next_id"]
         dead = set(snap["dead"])
-        for tid, item, attempts, done in snap["tasks"]:
-            t = _Task(tid, item, attempts=attempts, done=done)
+        for tid, item, attempts, done, *rest in snap["tasks"]:
+            t = _Task(tid, item, attempts=attempts, done=done,
+                      enqueued_at=rest[0] if rest else 0.0)
             q._tasks[tid] = t
             if tid in dead:
                 q.dead.append(t)
-            elif not done:
-                q._pending.append(tid)   # leases do not survive restarts
+        # Leases do not survive restarts, but FIFO fairness must: replay
+        # the snapshotted pending order first (it encodes requeues/nacks),
+        # then append tasks that were leased at snapshot time in task-id
+        # order.  Old snapshots without "pending" degrade to id order.
+        snapped = snap.get("pending")
+        order = list(snapped) if snapped is not None else []
+        seen = set(order) | dead
+        for tid, *_ in snap["tasks"]:
+            if tid not in seen and not q._tasks[tid].done:
+                order.append(tid)
+        q._pending = [tid for tid in order if tid not in dead
+                      and not q._tasks[tid].done]
         return q
 
 

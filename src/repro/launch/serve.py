@@ -91,14 +91,18 @@ def serve_static(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
                  gen: int, batch: int = 4, seed: int = 0,
                  gen_lens: Optional[Sequence[int]] = None,
                  lease_timeout: float = 30.0, warmup: bool = False,
-                 requests: Optional[Sequence[dict]] = None):
+                 requests: Optional[Sequence[dict]] = None,
+                 cfg_override=None):
     """Legacy static batcher (benchmark baseline — see module docstring).
 
     Batches drain-then-refill: each leased batch decodes until its longest
     request's stop length, then every member is acked and the next batch
     forms.  Per-request stop lengths are honored by truncation.
+    ``cfg_override`` substitutes an explicit ModelConfig so benchmarks can
+    compare against the continuous engine on identical custom shapes.
     """
-    cfg = registry.get_smoke(arch) if smoke else registry.get_config(arch)
+    cfg = cfg_override if cfg_override is not None else (
+        registry.get_smoke(arch) if smoke else registry.get_config(arch))
     par = registry.get_parallel(arch)
     mesh = single_device_mesh()
     S = prompt_len + gen
@@ -112,10 +116,6 @@ def serve_static(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
     prefill = steps_mod.build_prefill(cfg, par, mesh, shape).jit()
     decode = steps_mod.build_decode(
         cfg, par, mesh, ShapeConfig("serve", S, batch, "decode")).jit()
-
-    queue = _request_queue(requests, cfg, n_requests=n_requests,
-                           prompt_len=prompt_len, gen=gen, seed=seed,
-                           gen_lens=gen_lens, lease_timeout=lease_timeout)
 
     T = steps_mod.token_len(cfg, shape) if cfg.family == "audio" else prompt_len
     # prefill caches cover only the prompt; splice them into a full-length
@@ -138,6 +138,12 @@ def serve_static(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
             tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
             decode(params, caches, tok, jnp.int32(T))
             t_start = time.perf_counter()
+        # requests enqueue after warmup so TTFT (enqueue -> first token,
+        # same accounting as the continuous engine) excludes compile time
+        queue = _request_queue(requests, cfg, n_requests=n_requests,
+                               prompt_len=prompt_len, gen=gen, seed=seed,
+                               gen_lens=gen_lens,
+                               lease_timeout=lease_timeout)
         while not queue.drained():
             # ---- batch formation (drain-then-refill barrier)
             leased = []
@@ -161,6 +167,9 @@ def serve_static(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
             caches = pad_cache(steps_mod.init_cache(cfg, batch, S), small)
             tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
             metrics.gauge(GAUGES.PREFILL_S, time.perf_counter() - t0)
+            now = time.monotonic()      # the queue's clock, for TTFT
+            for tid, _ in leased:
+                metrics.gauge(GAUGES.TTFT_S, now - queue.enqueued_at(tid))
 
             # ---- decode loop: the whole batch runs to max(want)
             out_tokens = [np.asarray(tok)]
@@ -172,11 +181,14 @@ def serve_static(arch: str, *, smoke: bool, n_requests: int, prompt_len: int,
             decode_s += time.perf_counter() - t1
 
             gen_tok = np.concatenate(out_tokens, axis=1)
+            now = time.monotonic()
             for row, (tid, req) in enumerate(leased):
                 results[req["id"]] = gen_tok[row, :want[row]].tolist()
                 queue.ack(tid, "server")
                 metrics.inc(GAUGES.COMPLETED)
                 metrics.inc(GAUGES.TOKENS, want[row])
+                metrics.gauge(GAUGES.LATENCY_S,
+                              now - queue.enqueued_at(tid))
     wall = time.perf_counter() - t_start
     record_serving_totals(metrics, sum(len(v) for v in results.values()),
                           wall, decode_s)

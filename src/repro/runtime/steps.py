@@ -441,6 +441,146 @@ def cache_batch_evict(dst, slot):
     return jax.tree.map(ev, dst)
 
 
+# ---------------------------------------------------------------------------
+# paged KV pool: block tables + gather/scatter decode addressing
+# ---------------------------------------------------------------------------
+# The slotted cache above dedicates S positions to every slot whether the
+# request uses them or not; the paged layout replaces axis 1 (slots) with a
+# shared pool of fixed-size blocks — leaf shape (layers, num_blocks,
+# block_size, ...) — addressed through per-slot block tables (B, S//bs).
+# Block 0 is the NULL block: table entries for not-yet-allocated tail
+# positions point at it, and out-of-range scatter writes are clamped onto
+# it, so its contents are garbage-but-finite — which the decode mask turns
+# into an exact 0.0 contribution (exp(-1e30 - m) == 0.0 in f32), keeping
+# paged decode bit-identical to the slotted baseline.
+
+def paged_compatible(cfg: ModelConfig, S: int, block_size: int) -> bool:
+    """True iff every cache leaf is a (layers, batch, cache_seq, ...) KV
+    layout whose sequence axis is exactly S and divisible into blocks.
+    SSM/RWKV state caches and enc-dec cross caches are not paged-able;
+    callers fall back to the slotted cache."""
+    if block_size < 1 or S % block_size:
+        return False
+    mod = _model_module(cfg)
+    flags = []
+    pr.tree_map_schema(
+        lambda path, ps: flags.append(
+            len(ps.axes) >= 3 and ps.axes[2] == "cache_seq"
+            and ps.shape[2] == S),
+        mod.cache_schema(cfg, 1, S))
+    return bool(flags) and all(flags)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Allocate an all-zeros block pool: the cache schema instantiated with
+    batch=num_blocks, seq=block_size gives exactly the pool leaf layout
+    (layers, num_blocks, block_size, ...)."""
+    mod = _model_module(cfg)
+    abstract = pr.abstract_params(
+        mod.cache_schema(cfg, num_blocks, block_size), cfg.param_dtype)
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), abstract)
+
+
+def paged_cache_view(pool, tables):
+    """Gather each slot's blocks into a contiguous (layers, B, S, ...) view
+    value-identical to the slotted cache — the decode forward runs on it
+    unchanged.  ``tables`` is (B, S // block_size) int32 block ids."""
+    def gather(leaf):
+        g = leaf[:, tables]                       # (G, B, nb, bs, *tail)
+        return g.reshape(g.shape[0], g.shape[1], g.shape[2] * g.shape[3],
+                         *g.shape[4:])
+    return jax.tree.map(gather, pool)
+
+
+def paged_cache_scatter(pool, views, tables, pos):
+    """Write back the one row per slot that the decode step mutated.
+
+    ``views`` is the post-forward gathered cache; slot i wrote position
+    ``pos[i]``.  Rows whose position is out of range (free slots parked at
+    0 with an all-null table, or finished slots past S-1) land on the null
+    block, where duplicate writes are harmless by the masking argument
+    above."""
+    B = tables.shape[0]
+
+    def scat(pleaf, vleaf):
+        bs = pleaf.shape[2]
+        S = vleaf.shape[2]
+        rows = vleaf[:, jnp.arange(B), pos]       # (G, B, *tail)
+        blk = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+        blk = jnp.where(pos < S, blk, 0)
+        return pleaf.at[:, blk, pos % bs].set(rows.astype(pleaf.dtype))
+
+    return jax.tree.map(scat, pool, views)
+
+
+def paged_prompt_insert(pool, src, blocks):
+    """Splice a B=1 prefill cache (leaves (layers, 1, P, ...)) into the
+    pool at the given (P // block_size,) distinct block ids."""
+    def ins(pleaf, sleaf):
+        bs = pleaf.shape[2]
+        tail = sleaf.shape[3:]
+        nb = sleaf.shape[2] // bs
+        chunks = sleaf[:, 0].reshape(sleaf.shape[0], nb, bs, *tail)
+        return pleaf.at[:, blocks].set(chunks.astype(pleaf.dtype))
+
+    return jax.tree.map(ins, pool, src)
+
+
+def build_paged_decode(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh,
+                       shape: ShapeConfig, *, block_size: int,
+                       num_blocks: int) -> StepBundle:
+    """One fused per-slot decode step against the paged pool:
+    gather block-table views -> identical forward -> scatter the written
+    row back.  Signature: (params, pool, tables, token, pos) ->
+    (next_token, pool); donate the pool for in-place updates."""
+    cfg = resolve_cfg(cfg, shape)
+    mod = _model_module(cfg)
+    ctx = ModelCtx(cfg, par, mesh)
+    rules = sh.logical_rules(par)
+    schema = mod.lm_schema(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if not paged_compatible(cfg, S, block_size):
+        raise ValueError(f"{cfg.family} cache is not paged-compatible "
+                         f"for S={S}, block_size={block_size}")
+
+    abstract_params = pr.abstract_params(schema, cfg.param_dtype)
+    param_shd = sh.shardings_for_schema(schema, mesh, rules)
+    pool_schema = mod.cache_schema(cfg, num_blocks, block_size)
+    abstract_pool = pr.abstract_params(pool_schema, cfg.param_dtype)
+    # the block axis is an arbitrary permutation of slots x positions —
+    # keep it (and the intra-block axis) unsharded; heads/layers shard as
+    # in the slotted cache
+    pool_shd = pr.tree_map_schema(
+        lambda path, ps: sh.sharding_for(
+            ps.shape, (ps.axes[0], None, None) + tuple(ps.axes[3:]),
+            mesh, rules),
+        pool_schema)
+    nb = S // block_size
+    tab_abs = jax.ShapeDtypeStruct((B, nb), jnp.int32)
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_shd = sh.sharding_for((B, 1), ("batch", None), mesh, rules)
+    repl = NamedSharding(mesh, P())
+
+    def paged_step(params, pool, tables, token, pos):
+        views = paged_cache_view(pool, tables)
+        hidden, new_views, _ = mod.forward(ctx, params, token, mode="decode",
+                                           caches=views, pos=pos)
+        logits = mod.lm_logits(ctx, params, hidden)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        pool = paged_cache_scatter(pool, new_views, tables, pos)
+        return next_tok[:, None], pool
+
+    return StepBundle(
+        fn=paged_step,
+        abstract_args=(abstract_params, abstract_pool, tab_abs, tok_abs,
+                       pos_abs),
+        in_shardings=(param_shd, pool_shd, repl, tok_shd, repl),
+        out_shardings=(tok_shd, pool_shd),
+        donate_argnums=(1,),
+    )
+
+
 def build_step(cfg, par, ocfg, mesh, shape: ShapeConfig) -> StepBundle:
     if shape.kind == "train":
         return build_train(cfg, par, ocfg, mesh, shape)

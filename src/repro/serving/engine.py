@@ -9,9 +9,15 @@ which decode slots; this engine owns everything jitted:
   * one fused per-slot decode step (runtime.steps.build_slot_decode) that
     advances ALL active slots one token per call, each at its own sequence
     position — a request admitted mid-flight rides the very next step;
-  * the slotted cache itself: every cache leaf is (layers, slots, ...), so
-    slot i is row i of axis 1 across attention K/V, mamba conv/state and
-    encdec caches alike.
+  * the cache itself — either the classic slotted layout (every cache
+    leaf is (layers, slots, ...), slot i = row i of axis 1) or, when the
+    model family supports it, a paged block pool (runtime.steps
+    ``build_paged_decode``): slots address fixed-size blocks through
+    per-slot block tables, a host-side ``BlockPool`` refcounts them, and
+    a radix-style prefix cache lets requests sharing a system prompt skip
+    re-prefilling shared blocks (the suffix replays through the fused
+    decode step — chunked prefill).  Paged decode is bit-identical to the
+    slotted baseline (tests/test_serving_paged.py).
 
 Request lifecycle (see docs/architecture.md for the full diagram):
 
@@ -38,7 +44,8 @@ from repro.core.queue import WorkQueue
 from repro.serving.report import GAUGES, record_serving_totals
 from repro.models import params as pr
 from repro.runtime import steps as steps_mod
-from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.pool import BlockPool
+from repro.serving.scheduler import ContinuousScheduler, Slot
 
 
 class ServingEngine:
@@ -59,12 +66,28 @@ class ServingEngine:
     params:
         Optional pre-initialised params (e.g. restored from a
         checkpoint); randomly initialised from ``seed`` if omitted.
+    paged:
+        True forces the paged block pool (raises if the model family's
+        cache is not paged-able), False forces the slotted cache, None
+        (default) auto-selects paged whenever compatible.
+    block_size:
+        Tokens per KV block; must divide both the padded prompt length
+        and the cache length for paged mode.
+    pool_blocks:
+        Total blocks in the pool (incl. the reserved null block).  The
+        default sizes for all slots fully generated plus prefix-cache
+        headroom; shrink it to exercise pressure eviction/preemption.
+    prefix_cache:
+        Enable radix-style prefix reuse across requests (paged only).
     """
 
     def __init__(self, cfg: ModelConfig, par: ParallelConfig, mesh, *,
                  num_slots: int = 4, prompt_len: int = 32,
                  max_new_tokens: int = 16, seed: int = 0, params=None,
-                 registry: Optional[Registry] = None, clock=time.monotonic):
+                 registry: Optional[Registry] = None, clock=time.monotonic,
+                 paged: Optional[bool] = None, block_size: int = 8,
+                 pool_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.mesh = mesh
         self.num_slots = num_slots
         self.max_new_tokens = max_new_tokens
@@ -103,11 +126,62 @@ class ServingEngine:
             return jnp.argmax(last[0], -1).astype(jnp.int32), caches
 
         self._prefill_insert = jax.jit(prefill_insert, donate_argnums=1)
-        self._decode = steps_mod.build_slot_decode(cfg, par, mesh, shape).jit()
-        self._caches = steps_mod.init_cache(cfg, num_slots, S)
         ex_abs, _ = steps_mod.extras_specs(cfg, 1)
         self._extras = (({k: jnp.zeros(v.shape, v.dtype)
                           for k, v in ex_abs.items()},) if ex_abs else ())
+
+        compatible = (steps_mod.paged_compatible(cfg, self.cache_len,
+                                                 block_size)
+                      and self.prompt_pad % block_size == 0
+                      and self.prompt_pad >= block_size)
+        if paged and not compatible:
+            raise ValueError(
+                f"{cfg.family} cache cannot be paged with "
+                f"block_size={block_size} (prompt_pad={self.prompt_pad}, "
+                f"cache_len={self.cache_len})")
+        self.paged = compatible if paged is None else bool(paged)
+        self.block_size = block_size
+        self.prefix_cache = bool(prefix_cache) and self.paged
+
+        if self.paged:
+            nb_total = self.cache_len // block_size
+            nb_prompt = self.prompt_pad // block_size
+            if pool_blocks is None:
+                # all slots fully generated + prefix-cache headroom + null
+                pool_blocks = 1 + num_slots * nb_total + 2 * nb_prompt
+            if pool_blocks < 1 + nb_prompt + 1:
+                raise ValueError(
+                    f"pool_blocks={pool_blocks} cannot admit one request "
+                    f"(needs {nb_prompt} prompt blocks + 1 gen + null)")
+            self._nb_total = nb_total
+            self._nb_prompt = nb_prompt
+            self._pool = steps_mod.init_paged_cache(cfg, pool_blocks,
+                                                    block_size)
+            self._tables = np.zeros((num_slots, nb_total), np.int32)
+            bytes_per_block = int(sum(
+                leaf.size // pool_blocks * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(self._pool)))
+            self.block_pool = BlockPool(pool_blocks, block_size,
+                                        bytes_per_block=bytes_per_block,
+                                        registry=self.metrics)
+            self._slot_meta = [None] * num_slots
+
+            def paged_prefill_insert(params, pool, prompt, blocks, *extras):
+                last, small = prefill_fn(params, prompt, *extras)
+                pool = steps_mod.paged_prompt_insert(pool, small, blocks)
+                return jnp.argmax(last[0], -1).astype(jnp.int32), pool
+
+            self._paged_prefill = jax.jit(paged_prefill_insert,
+                                          donate_argnums=1)
+            self._paged_decode = steps_mod.build_paged_decode(
+                cfg, par, mesh, shape, block_size=block_size,
+                num_blocks=pool_blocks).jit()
+            self._caches = None
+        else:
+            self.block_pool = None
+            self._decode = steps_mod.build_slot_decode(
+                cfg, par, mesh, shape).jit()
+            self._caches = steps_mod.init_cache(cfg, num_slots, S)
 
     # ----------------------------------------------------------- jit steps
     def _pad_prompt(self, prompt) -> np.ndarray:
@@ -117,15 +191,23 @@ class ServingEngine:
         return row
 
     def prefill_into(self, slot_index: int, prompt) -> int:
-        """Prefill one request alone and splice its cache into the slot.
-        Returns the first generated token."""
-        t0 = time.perf_counter()
-        first, self._caches = self._prefill_insert(
-            self.params, self._caches,
-            jnp.asarray(self._pad_prompt(prompt)), jnp.int32(slot_index),
-            *self._extras)
+        """Prefill one request alone and splice its cache into the slot
+        (slotted) or its prompt blocks (paged).  Returns the first
+        generated token."""
+        t0 = self.clock()
+        if self.paged:
+            blocks = self._tables[slot_index, :self._nb_prompt]
+            first, self._pool = self._paged_prefill(
+                self.params, self._pool,
+                jnp.asarray(self._pad_prompt(prompt)),
+                jnp.asarray(blocks), *self._extras)
+        else:
+            first, self._caches = self._prefill_insert(
+                self.params, self._caches,
+                jnp.asarray(self._pad_prompt(prompt)), jnp.int32(slot_index),
+                *self._extras)
         first = int(first)
-        self.metrics.gauge(GAUGES.PREFILL_S, time.perf_counter() - t0)
+        self.metrics.gauge(GAUGES.PREFILL_S, self.clock() - t0)
         return first
 
     def decode_step(self, tokens, positions) -> np.ndarray:
@@ -133,24 +215,107 @@ class ServingEngine:
         are per-slot (num_slots,) host lists; returns the new tokens."""
         tok = jnp.asarray(np.asarray(tokens, np.int32)[:, None])
         pos = jnp.asarray(np.asarray(positions, np.int32))
-        out, self._caches = self._decode(self.params, self._caches, tok, pos)
+        if self.paged:
+            out, self._pool = self._paged_decode(
+                self.params, self._pool, jnp.asarray(self._tables), tok, pos)
+        else:
+            out, self._caches = self._decode(self.params, self._caches,
+                                             tok, pos)
         return np.asarray(out)[:, 0]
 
     def warmup(self) -> None:
-        """Compile the three jitted paths (prefill, insert, decode) off the
+        """Compile the jitted paths (prefill+insert, decode) off the
         clock.  Two rounds: the first insert sees the freshly allocated
-        (uncommitted) cache, every later one sees a jit-output cache — a
-        different sharding signature, so one round would leave the second
-        compile on the serving clock.  Touches only slot 0, which the
-        first admission overwrites."""
+        (uncommitted) cache/pool, every later one sees a jit-output
+        array — a different sharding signature, so one round would leave
+        the second compile on the serving clock.  Paged warmup writes
+        into blocks 1..nb_prompt with all-null tables — content that is
+        either overwritten by the block's first owner or masked."""
+        if self.paged:
+            self._tables[0, :self._nb_prompt] = np.arange(
+                1, 1 + self._nb_prompt)
         for _ in range(2):
             self.prefill_into(0, [1] * self.prompt_pad)
             self.decode_step([0] * self.num_slots, [0] * self.num_slots)
+        if self.paged:
+            self._tables[0] = 0
+
+    # ------------------------------------------------------- paged plumbing
+    def _admit_paged(self, sched: ContinuousScheduler, slot: Slot) -> bool:
+        """Allocate blocks for an admitted request: retain cached shared
+        prefix blocks, alloc fresh ones for the rest of the prompt plus
+        the first generation block.  On a prefix hit the non-shared
+        suffix replays through the fused decode step instead of a full
+        prefill.  Returns False (and nacks the request) when the pool
+        cannot satisfy the admission."""
+        row = self._pad_prompt(slot.request.prompt)[0].tolist()
+        shared = []
+        if self.prefix_cache:
+            # cap the shared prefix one block short of the full prompt so
+            # the replay suffix is never empty — and so shared blocks are
+            # strictly before every write position (no copy-on-write)
+            shared = self.block_pool.match(
+                row, max_blocks=self._nb_prompt - 1)
+        fresh = self.block_pool.alloc(self._nb_prompt - len(shared) + 1)
+        if fresh is None:
+            self.block_pool.release(shared)
+            sched.release_slot(slot)     # nack: retry when capacity frees
+            return False
+        blocks = shared + fresh
+        self._slot_meta[slot.index] = {
+            "blocks": blocks, "n_prompt": self._nb_prompt, "prompt": row}
+        trow = np.zeros(self._nb_total, np.int32)
+        trow[:len(blocks)] = blocks
+        self._tables[slot.index] = trow
+        if shared:
+            sched.start_replay(slot, row[len(shared) * self.block_size:],
+                               len(shared) * self.block_size)
+        else:
+            first = self.prefill_into(slot.index, slot.request.prompt)
+            sched.start(slot, first, self.prompt_pad)
+        return True
+
+    def _ensure_paged_capacity(self, sched: ContinuousScheduler) -> None:
+        """Lazily allocate each active slot's next generation block at a
+        block boundary; under pool exhaustion preempt the *youngest* slot
+        (nack — the request requeues) until the write fits."""
+        for slot in sorted(sched.active(), key=lambda s: s.admitted_at):
+            if slot.free:               # preempted earlier in this sweep
+                continue
+            bi = slot.pos // self.block_size
+            if bi >= self._nb_total or self._tables[slot.index, bi] != 0:
+                continue
+            got = self.block_pool.alloc(1)
+            while got is None:
+                victims = [s for s in sched.active() if s is not slot]
+                if not victims:
+                    break
+                sched.release_slot(max(victims, key=lambda s: s.admitted_at))
+                got = self.block_pool.alloc(1)
+            if got is None:
+                sched.release_slot(slot)   # lone slot starved: requeue it
+                continue
+            self._tables[slot.index, bi] = got[0]
+            self._slot_meta[slot.index]["blocks"].append(got[0])
+
+    def _on_slot_release(self, slot: Slot, reason: str) -> None:
+        """Scheduler release hook: free the slot's blocks; a completed
+        request's prompt blocks go into the prefix cache first."""
+        meta = self._slot_meta[slot.index]
+        if meta is None:
+            return
+        self._slot_meta[slot.index] = None
+        if reason == "completed" and self.prefix_cache:
+            self.block_pool.cache_prefix(meta["prompt"],
+                                         meta["blocks"][:meta["n_prompt"]])
+        self.block_pool.release(meta["blocks"])
+        self._tables[slot.index] = 0
 
     # ----------------------------------------------------------- main loop
     def run(self, queue: WorkQueue, *, worker: str = "server",
             default_max_new: Optional[int] = None, idle_wait: float = 1e-3,
-            should_stop=None) -> Tuple[Dict[Any, list], Registry]:
+            should_stop=None, exit_on_drain: bool = True
+            ) -> Tuple[Dict[Any, list], Registry]:
         """Serve the queue to exhaustion with continuous batching.
 
         Admission, eviction and lease heartbeats happen between fused
@@ -162,22 +327,27 @@ class ServingEngine:
         ``should_stop`` (a zero-arg callable, e.g. ``PodCtx.should_stop``
         when the engine runs as a preemptible tenant pod under
         repro.vcluster) is polled between fused steps: when it goes true
-        the loop exits cleanly, in-flight requests' leases expire back to
-        the queue, and a re-placed engine resumes serving them.
+        the loop nacks every in-flight request back to the queue and
+        exits cleanly, so a re-placed engine resumes them immediately
+        instead of waiting out the visibility timeout.
         """
         cap = self.cache_len - self.prompt_pad
         sched = ContinuousScheduler(
             queue, self.num_slots, worker=worker, registry=self.metrics,
             clock=self.clock,
             default_max_new=min(default_max_new or self.max_new_tokens, cap))
-        t_start = time.perf_counter()
+        if self.paged:
+            sched.on_release = self._on_slot_release
+        t_start = self.clock()
         decode_s = 0.0
         with self.mesh:
             while True:
                 if should_stop is not None and should_stop():
-                    # preempted between steps: unfinished slots are NOT
-                    # acked — their queue leases expire and requeue
+                    # preempted between steps: nack every in-flight slot
+                    # so a replacement engine re-serves them after one
+                    # decode step, not one visibility timeout
                     self.metrics.inc(GAUGES.PREEMPTED)
+                    sched.release_all()
                     break
                 for slot in sched.admit():
                     # engine capacity bounds the stop length: past
@@ -185,22 +355,34 @@ class ServingEngine:
                     if slot.request.max_new_tokens > cap:
                         slot.request = dataclasses.replace(
                             slot.request, max_new_tokens=cap)
-                    first = self.prefill_into(slot.index, slot.request.prompt)
-                    sched.start(slot, first, self.prompt_pad)
+                    if self.paged:
+                        self._admit_paged(sched, slot)
+                    else:
+                        first = self.prefill_into(slot.index,
+                                                  slot.request.prompt)
+                        sched.start(slot, first, self.prompt_pad)
                 if not sched.active():
-                    if sched.finished():
+                    if sched.finished() and exit_on_drain:
                         break
-                    time.sleep(idle_wait)   # queue momentarily empty
+                    # queue momentarily empty — a long-lived replica
+                    # (exit_on_drain=False) idles here until its router
+                    # feeds it more work or stops it
+                    time.sleep(idle_wait)
                     continue
-                t0 = time.perf_counter()
+                if self.paged:
+                    self._ensure_paged_capacity(sched)
+                    if not sched.active():
+                        continue
+                t0 = self.clock()
                 toks = self.decode_step(sched.last_tokens(),
                                         sched.positions())
-                decode_s += time.perf_counter() - t0
+                decode_s += self.clock() - t0
                 sched.observe(toks)
                 sched.renew_leases()
-        wall = time.perf_counter() - t_start
+        wall = self.clock() - t_start
         results = sched.results()
-        record_serving_totals(self.metrics,
-                              sum(len(v) for v in results.values()),
+        # useful throughput counts only acked completions; a stale-acked
+        # duplicate's tokens are surfaced separately (serve/stale_tokens)
+        record_serving_totals(self.metrics, sched.useful_tokens,
                               wall, decode_s)
         return results, self.metrics

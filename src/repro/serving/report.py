@@ -25,15 +25,24 @@ class GAUGES:
     DECODE_STEPS = "serve/decode_steps"
     SLOT_OCCUPANCY = "serve/slot_occupancy"
     TTFT_S = "serve/ttft_s"
+    SERVICE_TTFT_S = "serve/service_ttft_s"
     LATENCY_S = "serve/request_latency_s"
+    QUEUE_DEPTH = "serve/queue_depth"
     LEASE_RENEWALS = "serve/lease_renewals"
     LEASE_LOST = "serve/lease_lost"
     STALE_ACK = "serve/stale_ack"
+    STALE_TOKENS = "serve/stale_tokens"
     PREFILL_S = "serve/prefill_s"
     PREEMPTED = "serve/preempted"
     WALL_S = "serve/wall_s"
     TOK_S = "serve/tok_s"
     DECODE_TOK_S = "serve/decode_tok_s"
+    PREFIX_HITS = "serve/prefix_hits"
+    PREFIX_MISSES = "serve/prefix_misses"
+    PREFIX_BYTES_SAVED = "serve/prefix_bytes_saved"
+    BLOCKS_IN_USE = "serve/blocks_in_use"
+    REPLICAS = "serve/replicas"
+    SCALE_EVENTS = "serve/scale_events"
 
 
 def make_requests(n_requests: int, prompt_len: int, gen: int, *,
@@ -97,16 +106,21 @@ def serving_report(metrics: Registry, *, step: str = "serve",
     def g(name, stat="last"):
         return s.get(name, {}).get(stat, 0.0)
 
+    hits = g(GAUGES.PREFIX_HITS, "total")
+    misses = g(GAUGES.PREFIX_MISSES, "total")
     return StepReport(
         step=step, pods=1, devices=devices,
         total_time_s=g(GAUGES.WALL_S),
         extra={
             "requests": g(GAUGES.COMPLETED, "total"),
             "tokens": g(GAUGES.TOKENS, "total"),
+            "stale tokens": g(GAUGES.STALE_TOKENS, "total"),
             "tokens/s": g(GAUGES.TOK_S),
             "decode tokens/s": g(GAUGES.DECODE_TOK_S),
             "mean slot occupancy": g(GAUGES.SLOT_OCCUPANCY, "mean"),
             "p50 latency (s)": g(GAUGES.LATENCY_S, "p50"),
             "p99 latency (s)": g(GAUGES.LATENCY_S, "p99"),
             "p50 ttft (s)": g(GAUGES.TTFT_S, "p50"),
+            "p50 service ttft (s)": g(GAUGES.SERVICE_TTFT_S, "p50"),
+            "prefix hit rate": hits / max(hits + misses, 1.0),
         })

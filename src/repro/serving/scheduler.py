@@ -29,11 +29,14 @@ clock and a fake engine — no devices, no wall time (tests/test_serving.py).
 Metrics (repro.core.metrics.Registry):
   serve/admitted          counter — requests admitted into slots
   serve/completed         counter — requests finished and acked
-  serve/tokens_generated  counter — useful tokens recorded
+  serve/tokens_generated  counter — useful (acked) tokens recorded
+  serve/stale_tokens      counter — tokens from stale-acked duplicates
   serve/decode_steps      counter — fused decode iterations
   serve/slot_occupancy    gauge   — active slots at each decode step
-  serve/ttft_s            series  — per-request time to first token
-  serve/request_latency_s series  — per-request admit -> completion
+  serve/queue_depth       gauge   — pending backlog sampled at admit()
+  serve/ttft_s            series  — per-request enqueue -> first token
+  serve/service_ttft_s    series  — per-request admit -> first token
+  serve/request_latency_s series  — per-request enqueue -> completion
   serve/lease_renewals    counter — successful lease heartbeats
   serve/lease_lost        counter — slots dropped on an expired lease
 """
@@ -76,7 +79,9 @@ class Slot:
     request: Optional[Request] = None
     pos: int = 0                      # cache position the next token writes
     tokens: List[int] = field(default_factory=list)
-    admitted_at: float = 0.0
+    replay: List[int] = field(default_factory=list)  # prompt suffix to feed
+    enqueued_at: float = 0.0          # queue submission time (queue clock)
+    admitted_at: float = 0.0          # lease time
     first_token_at: Optional[float] = None
     lease_renewed_at: float = 0.0
 
@@ -86,7 +91,7 @@ class Slot:
 
     @property
     def done(self) -> bool:
-        return (self.request is not None
+        return (self.request is not None and not self.replay
                 and len(self.tokens) >= self.request.max_new_tokens)
 
     def clear(self) -> None:
@@ -94,6 +99,7 @@ class Slot:
         self.request = None
         self.pos = 0
         self.tokens = []
+        self.replay = []
         self.first_token_at = None
 
 
@@ -133,6 +139,13 @@ class ContinuousScheduler:
         self._renew_after = queue.lease_timeout * renew_fraction
         self._default_max_new = default_max_new
         self._results: Dict[Any, List[int]] = {}
+        self.useful_tokens = 0        # acked completions only
+        self.stale_tokens = 0         # duplicated work (lease expired)
+        # Optional hook fired with (slot, reason) just before a slot is
+        # cleared; reason in {"completed", "lease_lost", "released"}.
+        # The paged engine frees/caches the slot's KV blocks here without
+        # the scheduler knowing anything about paging.
+        self.on_release = None
 
     # ------------------------------------------------------------ admission
     def admit(self) -> List[Slot]:
@@ -152,11 +165,15 @@ class ContinuousScheduler:
                 tid, item, default_max_new=self._default_max_new)
             slot.pos = 0
             slot.tokens = []
+            slot.replay = []
+            slot.enqueued_at = self.queue.enqueued_at(tid)
             slot.admitted_at = now
             slot.lease_renewed_at = now
             slot.first_token_at = None
             self.metrics.inc(GAUGES.ADMITTED)
             filled.append(slot)
+        # backlog after admission — the autoscaler's primary signal
+        self.metrics.gauge(GAUGES.QUEUE_DEPTH, self.queue.pending)
         return filled
 
     def start(self, slot: Slot, first_token: int, prompt_pos: int
@@ -167,9 +184,26 @@ class ContinuousScheduler:
         slot.tokens.append(int(first_token))
         slot.pos = int(prompt_pos)
         slot.first_token_at = self._clock()
+        # user-visible TTFT includes queue wait (enqueue -> first token);
+        # admit -> first token stays visible as the service-time gauge.
         self.metrics.gauge(GAUGES.TTFT_S,
+                           slot.first_token_at - slot.enqueued_at)
+        self.metrics.gauge(GAUGES.SERVICE_TTFT_S,
                            slot.first_token_at - slot.admitted_at)
         return self._evict_finished([slot])
+
+    def start_replay(self, slot: Slot, suffix: Sequence[int],
+                     start_pos: int) -> None:
+        """Prefix-cache hit path: the slot's shared prompt blocks are
+        already in the pool, so instead of a full prefill the engine feeds
+        the non-shared prompt *suffix* through the fused decode step, one
+        token per iteration (chunked prefill).  The slot emits nothing
+        until the replay drains; the step that consumes the last prompt
+        token produces the request's first generated token."""
+        if not suffix:
+            raise ValueError("replay suffix must be non-empty")
+        slot.replay = [int(t) for t in suffix]
+        slot.pos = int(start_pos)
 
     # --------------------------------------------------------- decode step
     def active(self) -> List[Slot]:
@@ -186,9 +220,17 @@ class ContinuousScheduler:
         return [s.pos for s in self.slots]
 
     def last_tokens(self) -> List[int]:
-        """Per-slot last generated token == next decode input (0 if free)."""
-        return [s.tokens[-1] if (not s.free and s.tokens) else 0
-                for s in self.slots]
+        """Per-slot next decode input: the head of a replaying slot's
+        prompt suffix, else the last generated token (0 if free)."""
+        out = []
+        for s in self.slots:
+            if s.free:
+                out.append(0)
+            elif s.replay:
+                out.append(s.replay[0])
+            else:
+                out.append(s.tokens[-1] if s.tokens else 0)
+        return out
 
     def observe(self, step_tokens: Sequence[int]
                 ) -> List[Tuple[Any, List[int]]]:
@@ -204,6 +246,22 @@ class ContinuousScheduler:
         stepped = []
         for slot, tok in zip(self.slots, step_tokens):
             if slot.free:
+                continue
+            if slot.replay:
+                # chunked-prefill replay: the step consumed one prompt
+                # token; its output is discarded unless the replay just
+                # drained, in which case it is the first generated token.
+                slot.replay.pop(0)
+                slot.pos += 1
+                if slot.replay:
+                    continue
+                slot.tokens.append(int(tok))
+                now = self._clock()
+                slot.first_token_at = now
+                self.metrics.gauge(GAUGES.TTFT_S, now - slot.enqueued_at)
+                self.metrics.gauge(GAUGES.SERVICE_TTFT_S,
+                                   now - slot.admitted_at)
+                stepped.append(slot)
                 continue
             slot.tokens.append(int(tok))
             slot.pos += 1
@@ -221,16 +279,21 @@ class ContinuousScheduler:
             self._results[req.rid] = list(slot.tokens)
             if self.queue.ack(slot.task_id, self.worker):
                 self.metrics.inc(GAUGES.COMPLETED)
+                self.metrics.inc(GAUGES.TOKENS, len(slot.tokens))
+                self.useful_tokens += len(slot.tokens)
             else:
                 # lease expired mid-flight and the task was reclaimed;
-                # at-least-once semantics: our result stands, the retry's
-                # ack will be ignored as stale.
+                # at-least-once semantics: our result stands, but the
+                # tokens are duplicated work — they must not count as
+                # useful throughput (they'd inflate tok/s exactly when
+                # the autoscaler is deciding off it).
                 self.metrics.inc(GAUGES.STALE_ACK)
-            self.metrics.inc(GAUGES.TOKENS, len(slot.tokens))
+                self.metrics.inc(GAUGES.STALE_TOKENS, len(slot.tokens))
+                self.stale_tokens += len(slot.tokens)
             self.metrics.gauge(GAUGES.LATENCY_S,
-                               now - slot.admitted_at)
+                               now - slot.enqueued_at)
             done.append((req.rid, list(slot.tokens)))
-            slot.clear()
+            self._release(slot, "completed")
         return done
 
     # -------------------------------------------------------------- leases
@@ -250,8 +313,34 @@ class ContinuousScheduler:
                 renewed += 1
             else:
                 self.metrics.inc(GAUGES.LEASE_LOST)
-                slot.clear()
+                self._release(slot, "lease_lost")
         return renewed
+
+    def _release(self, slot: Slot, reason: str) -> None:
+        if self.on_release is not None:
+            self.on_release(slot, reason)
+        slot.clear()
+
+    def release_slot(self, slot: Slot) -> bool:
+        """Return a slot's request to the queue un-acked (nack) and free
+        the slot — cooperative stop and pool-exhaustion preemption.  The
+        request requeues immediately, so a replacement engine re-serves it
+        after one decode step instead of one visibility timeout."""
+        if slot.free:
+            return False
+        ok = self.queue.nack(slot.task_id, self.worker)
+        self.metrics.inc(GAUGES.PREEMPTED)
+        self._release(slot, "released")
+        return ok
+
+    def release_all(self) -> int:
+        """Nack every in-flight slot (cooperative-stop teardown)."""
+        n = 0
+        for slot in self.slots:
+            if not slot.free:
+                self.release_slot(slot)
+                n += 1
+        return n
 
     # ------------------------------------------------------------- results
     def finished(self) -> bool:

@@ -245,6 +245,38 @@ class FairShareScheduler:
                          site=site, want=want, granted=c.granted)
         return c
 
+    def resize_claim(self, claim: CapacityClaim, want: int) -> int:
+        """Elastically regrow or shrink a live claim in place — the
+        serving autoscaler's capacity path: replicas scale up only as far
+        as the tenant's fair share allows, and scale-down returns the
+        devices to the pool immediately.  Shrinking always succeeds;
+        growth is clamped by site availability (excluding the claim's own
+        unleased headroom) and the tenant's ``max_devices`` ceiling.
+        Returns the new grant."""
+        if claim.released:
+            raise ValueError("cannot resize a released claim")
+        spec = self.tenants[claim.tenant].spec
+        with self._lock:
+            claim.want = want
+            if want <= claim.granted:
+                claim.granted = want
+            else:
+                site = self.fabric.sites[claim.site]
+                used = self.usage(claim.tenant).get(claim.site, 0)
+                own_headroom = max(0, claim.granted - used)
+                avail = max(0, self._available(site, claim.tenant)
+                            - own_headroom)
+                grow = min(want - claim.granted, avail)
+                ceiling = spec.max_devices
+                if ceiling is not None:
+                    grow = min(grow, max(0, ceiling
+                                         - self._total_usage(claim.tenant)
+                                         - own_headroom))
+                claim.granted += max(0, grow)
+        self.bus.publish("sched", source=claim.tenant, action="resized",
+                         site=claim.site, want=want, granted=claim.granted)
+        return claim.granted
+
     def release_claim(self, claim: CapacityClaim) -> None:
         with self._lock:
             claim.released = True

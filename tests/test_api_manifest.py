@@ -62,7 +62,13 @@ if HAVE_HYPOTHESIS:
                  "prompt": st.lists(st.integers(1, 50), min_size=1,
                                     max_size=4)}),
             max_size=3),
-        site=opt_names)
+        site=opt_names,
+        paged=st.none() | st.booleans(), block_size=st.integers(1, 16),
+        pool_blocks=st.none() | st.integers(2, 64),
+        prefix_cache=st.booleans(),
+        max_replicas=st.integers(1, 4),
+        target_backlog=small_floats,
+        ttft_slo_s=st.none() | small_floats)
 
     batch_jobs = st.builds(
         BatchJob,
@@ -111,6 +117,9 @@ def test_round_trip_without_hypothesis():
                  optimizer={"lr": 0.01}, site="gpu", devices=2),
         ServeJob(name="s", gen_lens=(4, 2),
                  requests=[{"id": 0, "prompt": [1, 2]}]),
+        ServeJob(name="s2", paged=True, block_size=4, pool_blocks=12,
+                 prefix_cache=False, min_replicas=2, max_replicas=4,
+                 target_backlog=2.5, ttft_slo_s=0.5),
         BatchJob(name="b", replicas=3, entrypoint="builtins:repr",
                  params={"x": 1}),
         WorkflowRun(name="w", only="train",

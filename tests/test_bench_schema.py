@@ -79,6 +79,28 @@ def test_scenario_bench_is_committed():
                 "steps_lost", "chargeback_usd"} <= set(r)
 
 
+def test_serving_bench_is_committed():
+    """Serving-at-scale acceptance: BENCH_serving.json pits the static
+    drain-then-refill batcher against the autoscaled paged+prefix
+    replica fleet, and the fleet wins on BOTH p99 TTFT (measured from
+    enqueue) and tok/s (acked completions only), with the prefix hit
+    rate and replica scale events recorded in the row."""
+    path = ROOT / "BENCH_serving.json"
+    assert path.exists(), "BENCH_serving.json must be committed"
+    doc = json.loads(path.read_text())
+    rows = {r["name"]: r for r in doc["rows"]}
+    static = rows["serving_static"]
+    fleet = rows["serving_paged_autoscaled"]
+    assert {"tok_s", "p99_ttft_s"} <= set(static)
+    assert {"tok_s", "p99_ttft_s", "prefix_hit_rate", "scale_events",
+            "replicas_max", "stale_tokens"} <= set(fleet)
+    assert fleet["tok_s"] > static["tok_s"]
+    assert fleet["p99_ttft_s"] < static["p99_ttft_s"]
+    assert fleet["prefix_hit_rate"] > 0
+    assert fleet["scale_events"] >= 1
+    assert fleet["replicas_max"] >= 2
+
+
 def test_workflow_bench_is_committed():
     """ISSUE 8 acceptance: BENCH_workflow.json shows the concurrent
     fan-out (width >= 8, branches spread over 3 sites) finishing in

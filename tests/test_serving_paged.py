@@ -1,0 +1,497 @@
+"""Paged KV pool, prefix reuse, replicas — and the serving-loop fixes.
+
+Host-side policy (BlockPool refcounts/eviction, router/autoscaler,
+scheduler accounting) is tested with fake clocks and fake engines — no
+devices.  The paged decode path is pinned against the slotted baseline
+bit for bit on the smoke config, and the pool-pressure preemption path
+runs through the real engine.
+"""
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import Registry
+from repro.core.queue import WorkQueue
+from repro.serving.pool import BlockPool
+from repro.serving.report import GAUGES
+from repro.serving.router import Autoscaler, ReplicaSet, serve_replicated
+from repro.serving.scheduler import ContinuousScheduler
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def mk_requests(gens, prompt=(5, 6, 7)):
+    return [{"id": i, "prompt": list(prompt), "max_new_tokens": g}
+            for i, g in enumerate(gens)]
+
+
+# -------------------------------------------------------------- block pool
+
+def test_pool_alloc_release_refcount():
+    pool = BlockPool(6, 4)              # block 0 reserved: 5 usable
+    assert pool.free_blocks == 5 and pool.in_use == 0
+    blocks = pool.alloc(3)
+    assert len(blocks) == 3 and 0 not in blocks
+    assert all(pool.ref(b) == 1 for b in blocks)
+    assert pool.in_use == 3 and pool.free_blocks == 2
+    pool.release(blocks)
+    assert pool.in_use == 0 and pool.free_blocks == 5
+    with pytest.raises(ValueError, match="refcount"):
+        pool.release([blocks[0]])       # double free
+
+
+def test_pool_exhaustion_allocates_nothing():
+    pool = BlockPool(4, 4)
+    assert pool.alloc(4) is None        # only 3 usable: all-or-nothing
+    assert pool.in_use == 0
+    got = pool.alloc(3)
+    assert pool.alloc(1) is None
+    pool.release(got[:1])
+    assert pool.alloc(1) is not None
+
+
+def test_pool_prefix_match_is_content_exact():
+    pool = BlockPool(8, 2)
+    prompt = [1, 2, 3, 4, 5, 6]
+    blocks = pool.alloc(3)
+    assert pool.cache_prefix(prompt, blocks) == 3
+    pool.release(blocks)                # cached: stay resident at ref 0
+    assert pool.cached_blocks == 3 and pool.in_use == 0
+
+    hit = pool.match(prompt, max_blocks=2)
+    assert hit == blocks[:2]            # capped below the full prompt
+    assert all(pool.ref(b) == 1 for b in hit)
+    # same length, different content: chain key misses at block 0
+    assert pool.match([9, 9, 3, 4, 5, 6], max_blocks=2) == []
+    # shared first block only: chain stops after one
+    assert pool.match([1, 2, 9, 9], max_blocks=2) == blocks[:1]
+
+    reg = pool.metrics.summary()
+    assert reg["serve/prefix_hits"]["total"] == 3
+    assert reg["serve/prefix_misses"]["total"] >= 2
+
+
+def test_pool_lru_eviction_only_under_pressure():
+    pool = BlockPool(4, 2)              # 3 usable
+    a = pool.alloc(2)
+    pool.cache_prefix([1, 2, 3, 4], a)
+    pool.release(a)                     # both cached at ref 0
+    b = pool.alloc(1)                   # free list still has one: no evict
+    assert pool.cached_blocks == 2
+    c = pool.alloc(2)                   # pressure: evicts LRU cached pair
+    assert c is not None and pool.cached_blocks == 0
+    assert pool.match([1, 2, 3, 4]) == []
+    pool.release(b + c)
+
+
+def test_pool_cached_block_with_live_ref_is_not_evictable():
+    pool = BlockPool(3, 2)              # 2 usable
+    a = pool.alloc(2)
+    pool.cache_prefix([1, 2, 3, 4], a)
+    pool.release(a[1:])                 # a[0] still referenced
+    assert pool.alloc(2) is None        # only a[1] is reclaimable
+    got = pool.alloc(1)
+    assert got == [a[1]]
+    pool.release(got + a[:1])
+
+
+# --------------------------------------------------- serving-loop bug fixes
+
+def test_ttft_measured_from_enqueue_not_admit():
+    """With one slot, the second request's TTFT must include its queue
+    wait; service TTFT (admit -> first token) stays small for both."""
+    clock = FakeClock()
+    reg = Registry()
+    q = WorkQueue(mk_requests([3, 3]), clock=clock)
+    sched = ContinuousScheduler(q, 1, registry=reg, clock=clock)
+    while not sched.finished():
+        for slot in sched.admit():
+            clock.advance(0.5)          # prefill cost
+            sched.start(slot, 100, 8)
+        if sched.active():
+            clock.advance(1.0)          # fused decode step
+            sched.observe([101])
+    ttft = [v for _, v in reg.series(GAUGES.TTFT_S).points]
+    service = [v for _, v in reg.series(GAUGES.SERVICE_TTFT_S).points]
+    assert ttft[0] == pytest.approx(0.5)         # admitted instantly
+    assert service[0] == pytest.approx(0.5)
+    # request 1 waited for request 0's 2 decode steps before admission
+    assert ttft[1] == pytest.approx(2.5 + 0.5)
+    assert service[1] == pytest.approx(0.5)
+    assert ttft[1] > service[1]
+
+
+def test_stale_ack_tokens_are_not_useful_throughput():
+    clock = FakeClock()
+    reg = Registry()
+    q = WorkQueue(mk_requests([3]), lease_timeout=10.0, clock=clock)
+    sched = ContinuousScheduler(q, 1, registry=reg, clock=clock)
+    [slot] = sched.admit()
+    sched.start(slot, 100, 8)
+    clock.advance(11.0)                 # lease expires mid-decode
+    tid, _ = q.lease("thief")
+    assert q.ack(tid, "thief")          # the reclaimer finishes first
+    sched.observe([101])
+    done = sched.observe([102])         # original completes -> stale ack
+    assert done and done[0][1] == [100, 101, 102]
+    s = reg.summary()
+    assert s["serve/stale_ack"]["total"] == 1
+    assert s["serve/stale_tokens"]["total"] == 3
+    assert "serve/tokens_generated" not in s     # nothing counted useful
+    assert sched.useful_tokens == 0 and sched.stale_tokens == 3
+
+
+def test_release_all_nacks_inflight_leases():
+    clock = FakeClock()
+    q = WorkQueue(mk_requests([5, 5, 5]), lease_timeout=1000.0, clock=clock)
+    sched = ContinuousScheduler(q, 2, clock=clock)
+    for slot in sched.admit():
+        sched.start(slot, 100, 8)
+    assert q.pending == 1 and q.leased == 2
+    assert sched.release_all() == 2
+    # nacked, not abandoned: pending again NOW, not one timeout later
+    assert q.pending == 3 and q.leased == 0
+    assert sched.occupancy == 0
+
+
+def test_queue_snapshot_restore_preserves_fifo_order():
+    clock = FakeClock()
+    q = WorkQueue([], lease_timeout=5.0, clock=clock)
+    for name in "abcd":
+        q.put({"id": name})
+    ta, _ = q.lease("w")                # a in flight at snapshot time
+    tb, _ = q.lease("w")
+    assert q.nack(tb, "w")              # b requeued behind c, d
+    snap = q.snapshot()
+
+    q2 = WorkQueue.restore(snap, clock=clock)
+    order = []
+    while True:
+        got = q2.lease("w2")
+        if got is None:
+            break
+        order.append(got[1]["id"])
+    # snapshotted pending order first (c, d, b), then the task that was
+    # leased at snapshot time (a) — never re-sorted into id order
+    assert order == ["c", "d", "b", "a"]
+
+    legacy = dict(snap)
+    del legacy["pending"]               # old snapshot: degrades to id order
+    q3 = WorkQueue.restore(legacy, clock=clock)
+    assert [q3.lease("w")[1]["id"] for _ in range(4)] == list("abcd")
+
+
+def test_queue_put_preserves_original_enqueue_time():
+    clock = FakeClock(t=7.0)
+    q = WorkQueue(clock=clock)
+    tid = q.put({"id": 0}, enqueued_at=2.0)
+    assert q.enqueued_at(tid) == 2.0
+    assert q.enqueued_at(q.put({"id": 1})) == 7.0
+
+
+# ------------------------------------------------------ router / autoscaler
+
+class FakeEngine:
+    """Queue-draining stand-in for ServingEngine: acks instantly, nacks
+    in-flight work on stop, records the fleet-shared serve gauges."""
+
+    def __init__(self, registry, delay=0.0):
+        self.metrics = registry
+        self.delay = delay
+
+    def run(self, queue, *, worker="server", should_stop=None,
+            exit_on_drain=False, **_):
+        results = {}
+        while not (should_stop is not None and should_stop()):
+            got = queue.lease(worker)
+            if got is None:
+                if exit_on_drain and queue.drained():
+                    break
+                time.sleep(0.001)
+                continue
+            tid, item = got
+            if self.delay:
+                time.sleep(self.delay)
+            if should_stop is not None and should_stop():
+                queue.nack(tid, worker)
+                break
+            queue.ack(tid, worker)
+            n = int(item.get("max_new_tokens", 1))
+            results[item["id"]] = [7] * n
+            self.metrics.inc(GAUGES.COMPLETED)
+            self.metrics.inc(GAUGES.TOKENS, n)
+        return results, self.metrics
+
+
+class IdleEngine:
+    """Never consumes; exists so routing/draining can be observed."""
+
+    def __init__(self, registry):
+        self.metrics = registry
+
+    def run(self, queue, *, worker="server", should_stop=None, **_):
+        while not (should_stop is not None and should_stop()):
+            time.sleep(0.001)
+        return {}, self.metrics
+
+
+def test_serve_replicated_scales_up_and_serves_everything():
+    reg = Registry()
+    reqs = mk_requests([2] * 24)
+    results, metrics, events = serve_replicated(
+        lambda name, r: FakeEngine(r, delay=0.01), reqs,
+        min_replicas=1, max_replicas=3, target_backlog=2.0,
+        registry=reg, reconcile_interval=0.005, timeout_s=30.0)
+    assert sorted(results) == list(range(24))
+    assert all(v == [7, 7] for v in results.values())
+    reasons = [e[3] for e in events]
+    assert reasons[0] == "startup" and "shutdown" in reasons
+    # the 24-deep backlog over target 2 forced a scale-up past 1 replica
+    assert metrics.series(GAUGES.REPLICAS).max >= 2
+    assert metrics.series(GAUGES.SCALE_EVENTS).total == len(events)
+    assert metrics.series(GAUGES.TOK_S).last > 0
+
+
+def test_router_session_affinity_and_least_loaded():
+    rset = ReplicaSet(lambda name, r: IdleEngine(r))
+    rset.scale_to(2)
+    a1 = rset.submit({"id": 0, "prompt": [1], "session": "alice"})
+    a2 = rset.submit({"id": 1, "prompt": [1], "session": "alice"})
+    assert a1 == a2                     # pinned: the replica's prefix
+    b = rset.submit({"id": 2, "prompt": [1], "session": "bob"})
+    assert b != a1                      # least-loaded breaks the tie
+    rset.stop_all()
+
+
+def test_scale_down_drains_queue_with_enqueue_time_preserved():
+    clock = FakeClock(t=5.0)
+    rset = ReplicaSet(lambda name, r: IdleEngine(r), clock=clock)
+    rset.scale_to(2)
+    for i in range(4):
+        rset.submit({"id": i, "prompt": [1]})
+    clock.advance(40.0)                 # well past any lease window
+    rset.scale_to(1, reason="drain-test")
+    [survivor] = rset._replicas
+    assert survivor.queue.pending == 4  # nothing lost in the retirement
+    order = []
+    while True:
+        got = survivor.queue.lease("w")
+        if got is None:
+            break
+        tid, item = got
+        # migrated requests keep charging TTFT from the FIRST enqueue
+        assert survivor.queue.enqueued_at(tid) == 5.0
+        order.append(item["id"])
+    assert sorted(order) == [0, 1, 2, 3]
+    rset.stop_all()
+
+
+def test_autoscaler_recommend_clamps_and_slo_bump():
+    class StubSet:
+        def __init__(self):
+            self.metrics = Registry()
+            self.backlog = 0
+            self.n = 1
+
+        def total_backlog(self):
+            return self.backlog
+
+        def observed(self):
+            return self.n
+
+    stub = StubSet()
+    sc = Autoscaler(stub, min_replicas=1, max_replicas=4,
+                    target_backlog=4.0, ttft_slo_s=0.5)
+    assert sc.recommend() == 1          # empty backlog, SLO series empty
+    stub.backlog = 9
+    assert sc.recommend() == math.ceil(9 / 4.0)
+    stub.backlog = 100
+    assert sc.recommend() == 4          # max clamp
+    stub.backlog = 0
+    stub.metrics.gauge(GAUGES.SERVICE_TTFT_S, 2.0)
+    assert sc.recommend() == stub.n + 1     # latency breach: +1
+    with pytest.raises(ValueError, match="min_replicas"):
+        Autoscaler(stub, min_replicas=3, max_replicas=2)
+
+
+def test_replicaset_capacity_gates_scale_up():
+    granted = []
+
+    def capacity(want):
+        granted.append(want)
+        return min(want, 2)             # the fair share caps the fleet
+
+    rset = ReplicaSet(lambda name, r: IdleEngine(r), capacity=capacity)
+    rset.scale_to(4)
+    assert rset.observed() == 2
+    rset.scale_to(0)
+    assert granted == [4]               # scale-down never asks
+
+
+def test_resize_claim_respects_fair_share():
+    from repro.fabric import Fabric
+    from repro.vcluster import FairShareScheduler, TenantSpec
+
+    fabric = Fabric()
+    fabric.add_site("s0", devices=list(range(4)))
+    sched = FairShareScheduler(fabric)
+    a = sched.create_tenant(TenantSpec("a", site_quota=4))
+    sched.create_tenant(TenantSpec("b", site_quota=4))
+    ca = a.claim("s0", 1, min_devices=1)
+    cb = sched.claim("b", "s0", want=2)
+    assert ca.granted == 1 and cb.granted == 2
+    # growth clamps at what b's reservation leaves free
+    assert sched.resize_claim(ca, 4) == 2
+    sched.release_claim(cb)
+    assert sched.resize_claim(ca, 4) == 4       # b's share returned
+    assert sched.resize_claim(ca, 1) == 1       # shrink always succeeds
+    ca.release()
+    with pytest.raises(ValueError, match="released"):
+        sched.resize_claim(ca, 2)
+
+
+# ------------------------------------------------- paged engine (smoke cfg)
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.configs import registry as cfg_registry
+    from repro.launch.mesh import single_device_mesh
+
+    return dict(cfg=cfg_registry.get_smoke("phi4-mini-3.8b"),
+                par=cfg_registry.get_parallel("phi4-mini-3.8b"),
+                mesh=single_device_mesh())
+
+
+def mk_engine(s, **kw):
+    from repro.serving import ServingEngine
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("max_new_tokens", 8)
+    return ServingEngine(s["cfg"], s["par"], s["mesh"], **kw)
+
+
+def prompt_requests(cfg, gens, *, seed=0, shared_prefix=0):
+    rng = np.random.RandomState(seed)
+    head = rng.randint(1, cfg.vocab_size, shared_prefix).tolist()
+    return [{"id": i,
+             "prompt": head + rng.randint(1, cfg.vocab_size,
+                                          8 - shared_prefix).tolist(),
+             "max_new_tokens": g}
+            for i, g in enumerate(gens)]
+
+
+def test_paged_decode_bit_identical_to_slotted(serve_setup):
+    """The acceptance pin: gather/scatter block addressing must produce
+    the SAME tokens as the contiguous slotted cache on an identical
+    trace — the null block's garbage is exactly masked out."""
+    s = serve_setup
+    gens = [8, 3, 5, 8, 2]
+    e_slot = mk_engine(s, paged=False, seed=0)
+    e_page = mk_engine(s, paged=True, block_size=4, prefix_cache=False,
+                       seed=0, params=e_slot.params)
+    assert not e_slot.paged and e_page.paged
+    reqs = prompt_requests(s["cfg"], gens)
+    r_slot, _ = e_slot.run(WorkQueue(reqs))
+    r_page, m = e_page.run(WorkQueue(reqs))
+    assert r_page == r_slot
+    assert [len(r_page[i]) for i in range(5)] == gens
+    assert m.summary()["serve/tokens_generated"]["total"] == sum(gens)
+
+
+def test_paged_prefix_reuse_hits_and_refcounts(serve_setup):
+    """Identical prompts through one slot: the first request prefills and
+    caches its prompt blocks, every later one retains them (hit) and
+    replays only the uncached suffix through the decode step."""
+    s = serve_setup
+    engine = mk_engine(s, num_slots=1, paged=True, block_size=4,
+                       prefix_cache=True, seed=0)
+    reqs = prompt_requests(s["cfg"], [4, 4, 4], seed=3)
+    same = reqs[0]["prompt"]
+    for r in reqs:
+        r["prompt"] = list(same)
+    results, metrics = engine.run(WorkQueue(reqs))
+    assert [len(results[i]) for i in range(3)] == [4, 4, 4]
+    sm = metrics.summary()
+    # nb_prompt=2, shareable capped at 1 block: requests 1 and 2 hit it
+    assert sm["serve/prefix_hits"]["total"] == 2
+    assert sm["serve/prefix_bytes_saved"]["total"] > 0
+    # all slots drained: every block released back (cached ones at ref 0)
+    assert engine.block_pool.in_use == 0
+    assert engine.block_pool.cached_blocks >= 1
+
+
+def test_paged_pool_pressure_preempts_youngest_and_recovers(serve_setup):
+    """A pool too small for two full generations: the youngest slot is
+    nacked back to the queue when the elder needs its next block, and
+    every request still completes exactly."""
+    s = serve_setup
+    # nb_prompt=2, nb_total=4: each request needs up to 5 blocks; 6
+    # usable blocks cannot hold two full generations at once
+    engine = mk_engine(s, paged=True, block_size=4, prefix_cache=False,
+                       pool_blocks=7, seed=0)
+    reqs = prompt_requests(s["cfg"], [8, 8, 8], seed=1)
+    queue = WorkQueue(reqs, max_attempts=100)
+    results, metrics = engine.run(queue)
+    assert sorted(results) == [0, 1, 2]
+    assert all(len(v) == 8 for v in results.values())
+    assert metrics.summary()["serve/preempted"]["total"] >= 1
+    assert queue.drained() and not queue.dead
+    assert engine.block_pool.in_use == 0
+
+
+def test_engine_stop_nacks_within_one_step_not_one_timeout(serve_setup):
+    """Cooperative stop with a huge visibility timeout: the in-flight
+    requests must be re-servable immediately (nack), not after the
+    lease expires — the preempted-replica acceptance bound."""
+    s = serve_setup
+    reqs = [{"id": i, "prompt": [1 + i] * 4, "max_new_tokens": 3}
+            for i in range(4)]
+    queue = WorkQueue(reqs, lease_timeout=1000.0)
+    engine = mk_engine(s, prompt_len=4, max_new_tokens=3)
+    calls = {"n": 0}
+
+    def stop_after_two():
+        calls["n"] += 1
+        return calls["n"] > 2
+
+    results, metrics = engine.run(queue, should_stop=stop_after_two)
+    assert len(results) < 4
+    assert queue.leased == 0            # nacked, not left to expire
+    assert queue.pending == 4 - queue.completed
+    # a replacement engine re-serves them NOW — no sleep, no timeout wait
+    engine2 = mk_engine(s, prompt_len=4, max_new_tokens=3,
+                        params=engine.params)
+    results2, _ = engine2.run(queue)
+    done = dict(results)
+    done.update(results2)
+    assert sorted(done) == [0, 1, 2, 3]
+    assert queue.drained()
+
+
+def test_engine_timing_rides_the_injected_clock(serve_setup):
+    """All engine timing flows through self.clock: under a never-
+    advancing fake clock every wall/TTFT stat is exactly zero even
+    though real seconds elapsed."""
+    s = serve_setup
+    clock = FakeClock()
+    engine = mk_engine(s, prompt_len=4, max_new_tokens=2, clock=clock)
+    results, metrics = engine.run(
+        WorkQueue([{"id": 0, "prompt": [1, 2], "max_new_tokens": 2}],
+                  clock=clock))
+    assert len(results[0]) == 2
+    sm = metrics.summary()
+    assert sm["serve/wall_s"]["last"] == 0.0
+    assert sm["serve/ttft_s"]["last"] == 0.0
+    assert sm["serve/request_latency_s"]["last"] == 0.0
+    assert sm["serve/prefill_s"]["max"] == 0.0
