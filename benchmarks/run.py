@@ -72,6 +72,10 @@ KNOWN_EXTRA_KEYS = frozenset({
     "p99_ttft_s", "p99_latency_s", "chargeback_usd",
     # serving at scale (serving_* rows)
     "prefix_hit_rate", "scale_events", "replicas_max", "stale_tokens",
+    # distributed RL (rl_* rows)
+    "rollout_tok_s", "learner_steps_s", "policy_lag_p99",
+    "max_lag_trained", "trained", "stale_dropped", "requeued_tickets",
+    "weight_syncs", "crashes",
 })
 
 
@@ -670,6 +674,59 @@ def bench_scenarios(fast: bool):
             chargeback_usd=g["chargeback"]["total"])
 
 
+def bench_rl(fast: bool):
+    """Distributed RL co-tenants (paper §I, §IV, §VI).
+
+    Runs ``examples/rl_cotenants.py`` in a subprocess (two serving
+    engines + the learner hot loop want a fresh jax) and parses its
+    ``RL_REPORT``: a serving-plane actor fleet feeding the elastic
+    learner through the rollout queue while the chaos controller kills
+    a lease-holding actor, resizes the fleet through the fair-share
+    claim, preempts the learner with a burst tenant and injects one
+    hard learner crash.  One row carries rollout generation throughput,
+    one the learner's step rate with the staleness audit (p99 policy
+    lag, stale drops), one the chaos/recovery accounting (steps lost
+    vs the checkpoint bound, tickets requeued by the killed actor).
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, os.path.join(root, "examples", "rl_cotenants.py")]
+    if fast:
+        cmd.append("--fast")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"rl cotenants bench failed:\n{out.stdout}"
+                           f"\n{out.stderr}")
+    rep = next(json.loads(l.split(" ", 1)[1]) for l in out.stdout.splitlines()
+               if l.startswith("RL_REPORT "))
+    row("rl_rollout_fleet", rep["wall_s"] * 1e6 / max(rep["trained"], 1),
+        f"tok_s={rep['rollout_tok_s']};rollouts={rep['rollouts_pushed']}",
+        rollout_tok_s=rep["rollout_tok_s"], trained=rep["trained"],
+        bytes_moved=rep["weight_bytes_pulled"])
+    row("rl_learner_steps", rep["wall_s"] * 1e6 / max(rep["steps_done"], 1),
+        f"steps_s={rep['learner_steps_s']};"
+        f"lag_p99={rep['policy_lag_p99']};stale={rep['stale_dropped']}",
+        learner_steps_s=rep["learner_steps_s"],
+        policy_lag_p99=rep["policy_lag_p99"],
+        max_lag_trained=rep["max_lag_trained"],
+        stale_dropped=rep["stale_dropped"],
+        weight_syncs=rep["weight_syncs"])
+    row("rl_chaos_recovery", rep["wall_s"] * 1e6,
+        f"steps_lost={rep['steps_lost']};"
+        f"preemptions={rep['preemptions']};crashes={rep['crashes']};"
+        f"requeued={rep['requeued_tickets']}",
+        steps_lost=rep["steps_lost"], preemptions=rep["preemptions"],
+        crashes=rep["crashes"], requeued_tickets=rep["requeued_tickets"])
+
+
 BENCHES = [
     ("connect_workflow", lambda fast: bench_connect_workflow(fast)),
     ("queue_scaling", lambda fast: bench_queue_scaling(fast)),
@@ -684,6 +741,7 @@ BENCHES = [
     ("workflow_fanout", lambda fast: bench_workflow_fanout(fast)),
     ("vcluster_fairness", lambda fast: bench_vcluster_fairness(fast)),
     ("scenarios", lambda fast: bench_scenarios(fast)),
+    ("rl", lambda fast: bench_rl(fast)),
 ]
 
 

@@ -1,6 +1,6 @@
 """The unified declarative workload API — one manifest-driven control
-plane for train / serve / batch / workflow across cluster, fabric and
-tenants (see docs/api.md).
+plane for train / serve / batch / workflow / RL across cluster, fabric
+and tenants (see docs/api.md).
 
     from repro.api import Session, TrainJob
 
@@ -9,14 +9,14 @@ tenants (see docs/api.md).
     out = handle.wait()
 """
 from repro.api.resources import (API_VERSION, BatchJob, KINDS, ManifestError,
-                                 ServeJob, TrainJob, WorkflowRun,
+                                 RLJob, ServeJob, TrainJob, WorkflowRun,
                                  WorkloadSpec, from_json, from_manifest,
                                  load_manifest, resolve_entrypoint)
 from repro.api.session import (Handle, Session, TERMINAL_STATES,
                                WorkloadState, WorkloadStatus)
 
 __all__ = [
-    "API_VERSION", "BatchJob", "Handle", "KINDS", "ManifestError",
+    "API_VERSION", "BatchJob", "Handle", "KINDS", "ManifestError", "RLJob",
     "ServeJob", "Session", "TERMINAL_STATES", "TrainJob", "WorkflowRun",
     "WorkloadSpec", "WorkloadState", "WorkloadStatus", "from_json",
     "from_manifest", "load_manifest", "resolve_entrypoint",

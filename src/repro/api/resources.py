@@ -2,12 +2,13 @@
 
 The paper's platform is *declarative*: users hand Kubernetes a manifest
 describing what should run, and the controllers make it so (§II, §VI).
-This module is that surface for the repro: four workload kinds —
+This module is that surface for the repro: five workload kinds —
 
   * ``TrainJob``     — self-healing elastic training (repro.elastic);
   * ``ServeJob``     — continuous-batching inference (repro.serving);
   * ``BatchJob``     — a plain orchestrator Job (repro.core.orchestrator);
   * ``WorkflowRun``  — a measured, resumable step DAG (repro.core.workflow);
+  * ``RLJob``        — actor fleet + elastic RL learner (repro.rl);
 
 each a frozen dataclass with a lossless ``to_manifest()`` /
 ``from_manifest()`` pair (plain dict/JSON — the YAML analogue), defaults
@@ -171,7 +172,7 @@ def _runtime_field(**kw):
 
 
 class WorkloadResource:
-    """Shared manifest plumbing for the four workload kinds."""
+    """Shared manifest plumbing for the workload kinds."""
 
     KIND: ClassVar[str] = ""
 
@@ -453,10 +454,94 @@ class WorkflowRun(WorkloadResource):
         return fn
 
 
-KINDS: Dict[str, Type[WorkloadResource]] = {
-    cls.KIND: cls for cls in (TrainJob, ServeJob, BatchJob, WorkflowRun)}
+@dataclass(frozen=True)
+class RLJob(WorkloadResource):
+    """Distributed RL: a serving-plane actor fleet feeding an elastic
+    policy-gradient learner (routes to ``repro.rl``).
 
-WorkloadSpec = Union[TrainJob, ServeJob, BatchJob, WorkflowRun]
+    ``actors`` ServingEngine replicas lease rollout tickets from one
+    shared work queue, push version-stamped trajectories into a leased
+    replay buffer, and pull fresh weights from a versioned policy store
+    every ``broadcast_every`` learner steps.  The learner drains
+    ``rollouts_per_step`` trajectories per optimizer step, never trains
+    on rollouts staler than ``max_policy_lag`` weight versions (stale
+    ones are dropped and metered), and checkpoint-resumes across
+    preemption with the replay queue snapshot riding in the manifest."""
+
+    KIND: ClassVar[str] = "RLJob"
+
+    name: str
+    learner_steps: int
+    arch: str = "phi4-mini-3.8b"
+    smoke: bool = True
+    actors: int = 2                     # rollout fleet width
+    rollouts_per_step: int = 2          # learner batch (trajectories/step)
+    prompt_len: int = 8
+    max_new_tokens: int = 8
+    seq_len: int = 32                   # learner sequence budget
+    slots: int = 2                      # decode-slot pool per actor
+    max_policy_lag: int = 2             # bounded-staleness contract
+    broadcast_every: int = 2            # learner steps between publishes
+    ckpt_every: int = 2
+    device_steps: int = 1               # fused optimizer steps per dispatch
+    keep: int = 3
+    seed: int = 0
+    fail_at: int = -1                   # inject ONE learner crash here
+    lease_timeout: float = 30.0
+    ckpt_dir: str = ""                  # "" = job-owned throwaway store
+    # model / optimizer overrides (kwargs for ModelConfig / the schedule)
+    config: Optional[Dict[str, Any]] = None
+    optimizer: Optional[Dict[str, Any]] = None
+    # paged KV pool on the actor engines
+    paged: Optional[bool] = None
+    block_size: int = 8
+    pool_blocks: Optional[int] = None
+    prefix_cache: bool = True
+    # tenant / fabric routing: actors serve at `site`, the learner trains
+    # at `learner_site` (default: same site), weights cross the fabric
+    site: Optional[str] = None
+    learner_site: Optional[str] = None
+    devices: Optional[int] = None       # tenant backend: actor claim size
+    min_devices: Optional[int] = None   # tenant backend: actor claim floor
+
+    def __post_init__(self):
+        self._canonicalize("config", "optimizer")
+        _require(bool(self.name), "must be a non-empty string",
+                 "metadata.name")
+        _require(self.learner_steps >= 1, "must be >= 1",
+                 "spec.learner_steps")
+        _require(self.actors >= 1, "must be >= 1", "spec.actors")
+        _require(self.rollouts_per_step >= 1, "must be >= 1",
+                 "spec.rollouts_per_step")
+        _require(self.prompt_len >= 1, "must be >= 1", "spec.prompt_len")
+        _require(self.max_new_tokens >= 1, "must be >= 1",
+                 "spec.max_new_tokens")
+        _require(self.seq_len >= 2, "must be >= 2 (one shifted pair)",
+                 "spec.seq_len")
+        _require(self.slots >= 1, "must be >= 1", "spec.slots")
+        _require(self.max_policy_lag >= 0, "must be >= 0",
+                 "spec.max_policy_lag")
+        _require(self.broadcast_every >= 1, "must be >= 1",
+                 "spec.broadcast_every")
+        _require(self.ckpt_every >= 0, "must be >= 0", "spec.ckpt_every")
+        _require(self.device_steps >= 1, "must be >= 1",
+                 "spec.device_steps")
+        _require(self.keep >= 1, "must be >= 1", "spec.keep")
+        _require(self.lease_timeout > 0, "must be > 0",
+                 "spec.lease_timeout")
+        _require(self.block_size >= 1, "must be >= 1", "spec.block_size")
+        _require(self.pool_blocks is None or self.pool_blocks >= 2,
+                 "must be >= 2 (one data block + the null block)",
+                 "spec.pool_blocks")
+        _require(self.devices is None or self.devices >= 1,
+                 "must be >= 1 when set", "spec.devices")
+
+
+KINDS: Dict[str, Type[WorkloadResource]] = {
+    cls.KIND: cls
+    for cls in (TrainJob, ServeJob, BatchJob, WorkflowRun, RLJob)}
+
+WorkloadSpec = Union[TrainJob, ServeJob, BatchJob, WorkflowRun, RLJob]
 
 
 # ------------------------------------------------------------- entrypoints

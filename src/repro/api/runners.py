@@ -3,8 +3,9 @@
 One runner method per (kind, backend) cell, all routing into the
 EXISTING machinery: ``repro.elastic`` / ``repro.fabric.failover`` /
 ``VirtualCluster.run_elastic`` for TrainJob, ``repro.serving`` for
-ServeJob, the orchestrator / fair-share scheduler for BatchJob, and
-``repro.core.workflow`` for WorkflowRun.  Runners execute inside the
+ServeJob, the orchestrator / fair-share scheduler for BatchJob,
+``repro.core.workflow`` for WorkflowRun, and ``repro.rl`` (actor fleet
++ elastic learner) for RLJob.  Runners execute inside the
 Handle's reconcile thread: they move the handle PLACING -> RUNNING,
 thread its cooperative ``should_stop`` into the subsystem, and return
 the workload's result dict.
@@ -16,8 +17,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.api.resources import (BatchJob, ManifestError, ServeJob, TrainJob,
-                                 WorkflowRun)
+from repro.api.resources import (BatchJob, ManifestError, RLJob, ServeJob,
+                                 TrainJob, WorkflowRun)
 from repro.api.session import Handle, WorkloadState
 from repro.configs import registry
 from repro.configs.base import ModelConfig, OptimizerConfig
@@ -36,10 +37,9 @@ def dataclass_kwargs(obj) -> Dict[str, Any]:
             for f in dataclasses.fields(obj) if f.init}
 
 
-def train_pieces(job: TrainJob):
-    """(ModelConfig, ParallelConfig, OptimizerConfig) for a TrainJob —
-    ONE resolution shared by the Session path and the deprecated
-    ``launch.train`` shim, so both train the same model identically."""
+def _resolve_pieces(job, steps: int):
+    """Shared (ModelConfig, ParallelConfig, OptimizerConfig) resolution
+    for any training-flavoured job (TrainJob / RLJob)."""
     if job.config is not None:
         cfg = ModelConfig(**job.config)
         base = OptimizerConfig()
@@ -56,12 +56,27 @@ def train_pieces(job: TrainJob):
         base = registry.get_optimizer(job.arch)
         par = registry.get_parallel(job.arch)
     okw: Dict[str, Any] = dict(
-        lr=1e-3, warmup_steps=max(job.steps // 20, 1),
-        decay_steps=job.steps, moment_dtype=base.moment_dtype,
+        lr=1e-3, warmup_steps=max(steps // 20, 1),
+        decay_steps=steps, moment_dtype=base.moment_dtype,
         second_moment=base.second_moment)
     if job.optimizer:
         okw.update(job.optimizer)
     return cfg, par, OptimizerConfig(**okw)
+
+
+def train_pieces(job: TrainJob):
+    """(ModelConfig, ParallelConfig, OptimizerConfig) for a TrainJob —
+    ONE resolution shared by the Session path and the deprecated
+    ``launch.train`` shim, so both train the same model identically."""
+    return _resolve_pieces(job, job.steps)
+
+
+def rl_pieces(job: RLJob):
+    """(ModelConfig, ParallelConfig, OptimizerConfig) for an RLJob.
+    The optimizer schedule spans the LEARNER's steps; the actors share
+    the same ModelConfig so version-0 weights (seeded identically on
+    both planes) and every published version stay schema-compatible."""
+    return _resolve_pieces(job, job.learner_steps)
 
 
 def elastic_spec(job: TrainJob, *, namespace: Optional[str] = None):
@@ -164,6 +179,135 @@ def serve_requests(job: ServeJob) -> List[dict]:
     return make_requests(job.n_requests, job.prompt_len, job.max_new_tokens,
                          vocab_size=resolve_serve_cfg(job).vocab_size,
                          seed=job.seed, gen_lens=job.gen_lens)
+
+
+def build_rl_engine(job: RLJob, cfg, par, *, registry_out=None):
+    """One actor's continuous-batching engine, built from the SAME
+    resolved ModelConfig as the learner (never re-resolved from the
+    arch) so published weight trees always match the engine schema."""
+    from repro.launch.mesh import single_device_mesh
+    from repro.serving import ServingEngine
+    return ServingEngine(cfg, par, single_device_mesh(),
+                         num_slots=job.slots, prompt_len=job.prompt_len,
+                         max_new_tokens=job.max_new_tokens, seed=job.seed,
+                         registry=registry_out, paged=job.paged,
+                         block_size=job.block_size,
+                         pool_blocks=job.pool_blocks,
+                         prefix_cache=job.prefix_cache)
+
+
+def run_rl_fleet(handle: Handle, job: RLJob, *, learner_store,
+                 actor_store=None, metrics: Registry, capacity=None):
+    """Shared RLJob driver: ticket feeder + actor fleet + learner.
+
+    All three backends land here; they differ only in which stores the
+    two planes see (one ObjectStore, or per-site federated views whose
+    cross-link weight pulls are metered) and whether fleet width is
+    gated by a fair-share ``capacity`` callable (``resize_claim``).
+
+    The feeder emits rollout tickets in *waves*: a burst is enqueued
+    only once the shared ticket queue is fully idle (no pending AND no
+    leased), which is exactly when every actor has exited its engine
+    wave and polled the policy store — so actors observe version bumps
+    between waves and the replay backlog (capped at ~2 learner chunks)
+    cannot age past ``max_policy_lag`` in steady state."""
+    import numpy as np
+
+    from repro.rl import (ActorFleet, PolicyStore, RLLearner, RLLearnerSpec,
+                          RolloutActor, RolloutQueue, ticket_queue)
+
+    cfg, par, ocfg = rl_pieces(job)
+    spec = RLLearnerSpec(
+        cfg, par, ocfg, steps=job.learner_steps, seq_len=job.seq_len,
+        batch=job.rollouts_per_step, device_steps=job.device_steps,
+        ckpt_every=job.ckpt_every, broadcast_every=job.broadcast_every,
+        max_policy_lag=job.max_policy_lag, seed=job.seed, keep=job.keep,
+        fail_at=job.fail_at)
+    tickets = ticket_queue(lease_timeout=job.lease_timeout)
+    rollouts = RolloutQueue(lease_timeout=job.lease_timeout,
+                            registry=metrics)
+    publish = PolicyStore(learner_store, registry=metrics)
+    subscribe = publish if actor_store is None \
+        else PolicyStore(actor_store, registry=metrics)
+    prompts: Dict[Any, List[int]] = {}
+
+    def make_actor(name):
+        return RolloutActor(name, build_rl_engine(job, cfg, par),
+                            tickets, rollouts, subscribe, prompts=prompts,
+                            registry=metrics)
+
+    fleet = ActorFleet(make_actor, width=job.actors, capacity=capacity,
+                       registry=metrics, name=f"{job.name}-actor")
+    learner = RLLearner(spec, rollouts, publish, store=learner_store,
+                        registry=metrics, name=job.name)
+    handle.probe("learner_step", lambda: learner.report.steps_done)
+    handle.probe("policy_version", lambda: learner.version)
+    handle.probe("actors", lambda: fleet.width)
+    handle.probe("rollouts_trained", lambda: rollouts.trained)
+
+    stop_feed = threading.Event()
+    handle.add_cancel_hook(stop_feed.set)
+    rng = np.random.default_rng(job.seed + 101)
+    burst = max(job.rollouts_per_step, job.actors * job.slots)
+    backlog_cap = 2 * job.rollouts_per_step * max(job.device_steps, 1)
+    n_fed = [0]
+
+    def feed():
+        while not stop_feed.is_set():
+            if (tickets.pending > 0 or tickets.leased > 0
+                    or rollouts.pending >= backlog_cap):
+                time.sleep(2e-3)
+                continue
+            for _ in range(burst):
+                rid = f"t{n_fed[0]:05d}"
+                n_fed[0] += 1
+                prompt = [int(x) for x in rng.integers(
+                    1, cfg.vocab_size, size=job.prompt_len)]
+                prompts[rid] = prompt
+                tickets.put({"id": rid, "prompt": prompt,
+                             "max_new_tokens": job.max_new_tokens})
+
+    feeder = threading.Thread(target=feed, name=f"{job.name}-feeder",
+                              daemon=True)
+    handle._transition(WorkloadState.RUNNING, actors=job.actors,
+                       steps=job.learner_steps)
+    granted = fleet.start()
+    feeder.start()
+    min_syncs = 0
+    try:
+        out = learner.run_supervised(handle.should_stop)
+        # the final version is published after the last step: give the
+        # (now idle) actors one beat to observe it before teardown
+        deadline = time.monotonic() + 10.0
+        while fleet.min_syncs() < 1 and time.monotonic() < deadline \
+                and fleet.width > 0:
+            time.sleep(5e-3)
+        min_syncs = fleet.min_syncs()
+    finally:
+        stop_feed.set()
+        fleet.stop_all()
+        feeder.join(timeout=10.0)
+    rep = learner.report
+    return {
+        "done": bool(out.get("done")),
+        "preempted": bool(out.get("preempted")),
+        "report": dataclasses.asdict(rep),
+        "losses": list(rep.losses),
+        "steps_done": rep.steps_done,
+        "steps_lost": rep.steps_lost,
+        "recoveries": rep.recoveries,
+        "publishes": rep.publishes,
+        "final_version": rep.final_version,
+        "trained": rollouts.trained,
+        "stale_dropped": rollouts.stale_dropped,
+        "max_lag_trained": rollouts.max_lag_trained(),
+        "rollouts_pushed": rollouts.pushed,
+        "tickets_fed": n_fed[0],
+        "actors_granted": granted,
+        "min_actor_syncs": min_syncs,
+        "actor_syncs": {n: a.syncs for n, a in fleet.actors.items()},
+        "metrics": metrics,
+    }
 
 
 def _watch_job(handle: Handle, cluster, job, *, poll_s: float = 0.01,
@@ -283,6 +427,19 @@ class ClusterBackend:
         handle._transition(WorkloadState.RUNNING, replicas=job.replicas)
         return {"results": _watch_job(handle, self.cluster, kjob)}
 
+    # --------------------------------------------------------------- RLJob
+    def run_rl(self, handle: Handle, job: RLJob):
+        handle._transition(WorkloadState.PLACING)
+        if job.ckpt_dir:
+            store = ObjectStore(job.ckpt_dir)
+        elif self.store is not None:
+            store = self.store
+        else:
+            import tempfile
+            store = ObjectStore(tempfile.mkdtemp(prefix="rl-ckpt-"))
+        return run_rl_fleet(handle, job, learner_store=store,
+                            metrics=Registry())
+
     # --------------------------------------------------------- WorkflowRun
     def run_workflow(self, handle: Handle, run: WorkflowRun):
         if self.store is None:
@@ -395,6 +552,33 @@ class FabricBackend:
         handle._transition(WorkloadState.RUNNING, site=site.name)
         return {"results": _watch_job(handle, site.cluster, kjob),
                 "site": site.name}
+
+    # --------------------------------------------------------------- RLJob
+    def run_rl(self, handle: Handle, job: RLJob):
+        """Actors and learner at (possibly) different sites of the
+        federation: the learner publishes weight versions into its
+        site's store view, actors fetch through THEIR site's view, so
+        every pull-on-bump is a metered cross-link transfer."""
+        planner = self._need_planner("RLJob")
+        handle._transition(WorkloadState.PLACING)
+        actor_site = self._pick_site(job, job.actors)
+        if job.learner_site is not None:
+            learner_site = self.fabric.sites[job.learner_site]
+            if not learner_site.up:
+                raise RuntimeError(f"site {job.learner_site!r} is down")
+        else:
+            learner_site = actor_site
+        handle._transition(WorkloadState.PLACING, site=actor_site.name,
+                           learner_site=learner_site.name)
+        fed = planner.fed
+        learner_store = fed.view(learner_site.name)
+        actor_store = None if learner_site.name == actor_site.name \
+            else fed.view(actor_site.name)
+        out = run_rl_fleet(handle, job, learner_store=learner_store,
+                           actor_store=actor_store, metrics=Registry())
+        out["site"] = actor_site.name
+        out["learner_site"] = learner_site.name
+        return out
 
     # --------------------------------------------------------- WorkflowRun
     def run_workflow(self, handle: Handle, run: WorkflowRun):
@@ -515,6 +699,33 @@ class TenantBackend:
         tj = self._watch_tenant_job(handle, tj)
         return {"results": tj.results() if tj.state == "done" else [],
                 "site": tj.site, "preemptions": tj.preemptions}
+
+    # --------------------------------------------------------------- RLJob
+    def run_rl(self, handle: Handle, job: RLJob):
+        """Actors and learner inside the tenant's fair share: one device
+        per actor is claimed up front and the fleet resizes through
+        ``resize_claim`` — another tenant's load caps the granted width.
+        Weight traffic moves through tenant-billed store views."""
+        site = job.site or next(iter(self.sched.fabric.sites))
+        learner_site = job.learner_site or site
+        handle._transition(WorkloadState.PLACING, site=site,
+                           learner_site=learner_site)
+        want = job.devices or job.actors
+        claim = self.tenant.claim(site, want,
+                                  min_devices=job.min_devices or 1)
+        learner_store = self.tenant.store(learner_site)
+        actor_store = None if learner_site == site \
+            else self.tenant.store(site)
+        try:
+            out = run_rl_fleet(
+                handle, job, learner_store=learner_store,
+                actor_store=actor_store, metrics=Registry(),
+                capacity=lambda w: self.sched.resize_claim(claim, w))
+        finally:
+            claim.release()
+        out["site"] = site
+        out["learner_site"] = learner_site
+        return out
 
     # --------------------------------------------------------- WorkflowRun
     def run_workflow(self, handle: Handle, run: WorkflowRun):

@@ -9,7 +9,7 @@ backend —
     Session(fabric=fabric, planner=planner)    # the multi-site federation
     Session(tenant=virtual_cluster)            # one tenant's fair share
 
-— then drive all four workload kinds with one verb set:
+— then drive every workload kind with one verb set:
 
     handle = session.apply(TrainJob(name="t", steps=20))   # or a manifest
     handle.status()        # observed state (phase + live probes)
@@ -36,9 +36,9 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Callable, Dict, List, Mapping, Optional
 
-from repro.api.resources import (BatchJob, ManifestError, ServeJob, TrainJob,
-                                 WorkflowRun, WorkloadSpec, from_manifest,
-                                 load_manifest)
+from repro.api.resources import (BatchJob, ManifestError, RLJob, ServeJob,
+                                 TrainJob, WorkflowRun, WorkloadSpec,
+                                 from_manifest, load_manifest)
 
 
 class WorkloadState(str, Enum):
@@ -306,11 +306,13 @@ class Session:
             ServeJob: self._backend.run_serve,
             BatchJob: self._backend.run_batch,
             WorkflowRun: self._backend.run_workflow,
+            RLJob: self._backend.run_rl,
         }.get(type(spec))
         if runner is None:
             raise ManifestError(
                 f"Session.apply got {type(spec).__name__}; expected one "
-                f"of TrainJob/ServeJob/BatchJob/WorkflowRun or a manifest")
+                f"of TrainJob/ServeJob/BatchJob/WorkflowRun/RLJob or a "
+                f"manifest")
         handle = Handle(spec, self._backend.kind, bus=self.bus)
         self.workloads.append(handle)
         return handle._launch(lambda h: runner(h, spec))

@@ -74,6 +74,9 @@ class WorkQueue:
             return t.enqueued_at if t is not None else 0.0
 
     def _reclaim_expired(self, now: float) -> None:
+        # requeues the ORIGINAL _Task (never re-puts): attempts and
+        # enqueued_at survive the implicit requeue, so queue-wait metrics
+        # charge from the first enqueue even across worker crashes
         expired = [tid for tid, t in self._leased.items()
                    if t.lease_expiry <= now]
         for tid in expired:
@@ -131,7 +134,11 @@ class WorkQueue:
             return True
 
     def nack(self, task_id: int, worker: str) -> bool:
-        """Return a task early (worker noticed it cannot finish)."""
+        """Return a task early (worker noticed it cannot finish).
+
+        Like lease-expiry reclaim, this requeues the same task object:
+        ``enqueued_at`` (and the attempt count) are preserved, never
+        reset to the nack time."""
         with self._lock:
             t = self._leased.get(task_id)
             if t is None or t.worker != worker:
@@ -160,6 +167,14 @@ class WorkQueue:
     def completed(self) -> int:
         with self._lock:
             return sum(1 for t in self._tasks.values() if t.done)
+
+    def leased_by(self, worker: str) -> int:
+        """Live leases held by ``worker`` — chaos hooks kill a worker at
+        a moment it provably holds work, tests then assert the requeue."""
+        now = self._clock()
+        with self._lock:
+            return sum(1 for t in self._leased.values()
+                       if t.worker == worker and t.lease_expiry > now)
 
     def drained(self) -> bool:
         with self._lock:

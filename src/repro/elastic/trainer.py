@@ -205,7 +205,7 @@ class _SegmentResult:
     t_first_s: float = 0.0    # t_first_done relative to segment start
 
 
-def _snap(every: int, device_steps: int) -> int:
+def snap_cadence(every: int, device_steps: int) -> int:
     """Snap a per-step cadence UP to chunk granularity (0 = off stays off).
     Checkpoint/log actions only happen at chunk boundaries, so the
     effective cadence is the smallest multiple of ``device_steps`` >= the
@@ -216,7 +216,7 @@ def _snap(every: int, device_steps: int) -> int:
     return ((every + k - 1) // k) * k
 
 
-def _chunk_schedule(start: int, steps: int, device_steps: int):
+def chunk_schedule(start: int, steps: int, device_steps: int):
     """Chunks covering [start, steps), aligned to the ABSOLUTE step grid
     (boundaries at multiples of device_steps from step 0), so snapped
     cadences fire exactly on boundaries no matter where a restore lands.
@@ -228,6 +228,13 @@ def _chunk_schedule(start: int, steps: int, device_steps: int):
         out.append((i, bound - i))
         i = bound
     return out
+
+
+# chunk-cadence helpers are shared with the RL learner (repro.rl.learner
+# rides the same device-resident hot loop); the old private names remain
+# for in-module callers
+_snap = snap_cadence
+_chunk_schedule = chunk_schedule
 
 
 class ElasticTrainer:

@@ -47,6 +47,63 @@ def sharded_cross_entropy(ctx, x, labels, head, *, softcap=None):
     return jnp.mean(lse - gold)
 
 
+def weighted_cross_entropy(x, labels, head, weights, *, denom=None,
+                           softcap=None, chunk: int = 512,
+                           fused: Optional[bool] = None):
+    """Per-token-weighted NLL — the policy-gradient form of the LM loss.
+
+    x (B,S,D) final hidden states; labels (B,S) int32; head (V,D);
+    weights (B,S) f32 — each token's NLL is scaled by its weight before
+    the reduction.  RL callers (repro.rl) fold ``mask * advantage`` into
+    ``weights``: REINFORCE's surrogate sum_t A_t * -log pi(a_t|s_<t) IS
+    advantage-weighted cross entropy, so the same chunked scan (and the
+    same fused Pallas softmax-xent kernel, which already returns
+    per-token NLL) serves both supervised and RL training.
+
+    ``denom`` normalizes the weighted sum (default: token count B*S;
+    RL passes the action-token count sum(mask)).  Zero weights make a
+    token's contribution — and its gradient — exactly zero, so padding
+    and prompt positions never train.
+    """
+    B, S, D = x.shape
+    if fused is None:
+        fused = fused_xent_default()
+
+    def fn(xc, lc, wc):
+        logits = jnp.einsum("bcd,vd->bcv", xc, head).astype(jnp.float32)
+        if fused:
+            from repro.kernels.xent import softmax_xent
+            V = head.shape[0]
+            nll = softmax_xent(logits.reshape(-1, V), lc.reshape(-1),
+                               softcap=softcap,
+                               interpret=interpret_default())
+            return jnp.sum(nll * wc.reshape(-1))
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        m = jnp.max(logits, axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * wc)
+
+    fn = jax.checkpoint(fn, prevent_cse=False)
+    weights = weights.astype(jnp.float32)
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    if n == 1:
+        total = fn(x, labels, weights)
+    else:
+        xr = x.reshape(B, n, chunk, D).swapaxes(0, 1)          # (n,B,c,D)
+        lr = labels.reshape(B, n, chunk).swapaxes(0, 1)        # (n,B,c)
+        wr = weights.reshape(B, n, chunk).swapaxes(0, 1)       # (n,B,c)
+        total, _ = jax.lax.scan(
+            lambda acc, xs: (acc + fn(*xs), None), 0.0, (xr, lr, wr))
+    if denom is None:
+        denom = jnp.float32(B * S)
+    return total / denom
+
+
 def _chunk_nll(x_chunk, labels_chunk, head):
     """x (B,c,D) @ head (V,D) -> mean-able NLL terms for one chunk (f32)."""
     logits = jnp.einsum("bcd,vd->bcv", x_chunk, head).astype(jnp.float32)

@@ -334,6 +334,28 @@ def loss_fn(ctx: ModelCtx, params, batch) -> jax.Array:
     return nll + aux
 
 
+def rl_loss_fn(ctx: ModelCtx, params, batch) -> jax.Array:
+    """Advantage-weighted policy-gradient loss (the repro.rl learner).
+
+    batch: tokens/labels (B,S) int32 as in ``loss_fn``, plus
+    mask (B,S) f32 — 1.0 on generated (action) label positions — and
+    advantages (B,) f32, one normalized return per trajectory.  The
+    surrogate sum_t A * -log pi(label_t) / sum(mask) is exactly
+    mask*advantage-weighted cross entropy, so the chunked/fused xent
+    path is reused unchanged; prompt and pad positions get weight 0 and
+    contribute no gradient.
+    """
+    x, _, aux = forward(ctx, params, batch["tokens"], mode="train",
+                        extras=batch.get("extras"))
+    head = lm_head(ctx.cfg, params).astype(ctx.compute_dtype)
+    w = batch["mask"] * batch["advantages"][:, None]
+    denom = jnp.maximum(jnp.sum(batch["mask"]), 1.0)
+    pg = losses.weighted_cross_entropy(
+        x, batch["labels"], head, w, denom=denom,
+        softcap=ctx.cfg.final_logit_softcap)
+    return pg + aux
+
+
 # register the MoE kind (module import avoids a cycle at definition time)
 from repro.models import moe as _moe  # noqa: E402
 

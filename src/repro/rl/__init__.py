@@ -1,0 +1,30 @@
+"""Distributed RL workload: a serving-plane actor fleet feeding an
+elastic policy-gradient learner over the federated store.
+
+The first workload that exercises serving + training + data plane +
+tenancy simultaneously:
+
+  * actors  — ``ServingEngine`` replicas (continuous batching, paged KV)
+              leasing rollout tickets from one shared ``WorkQueue``;
+  * replay  — a lease-heartbeat ``RolloutQueue`` of version-stamped
+              trajectories (staleness-bounded by ``max_policy_lag``);
+  * learner — the chunked-scan hot loop with the advantage-weighted
+              policy-gradient loss, checkpoint/resume elastic;
+  * weights — versioned ``PolicyStore`` broadcast (publish atomically,
+              actors pull-on-version-bump; federated = metered pulls).
+
+Declared through the unified API as an ``RLJob`` (docs/rl.md).
+"""
+from repro.rl.actor import ActorFleet, RolloutActor, default_reward
+from repro.rl.learner import (InjectedLearnerFailure, RLLearner,
+                              RLLearnerSpec, RLRunReport)
+from repro.rl.replay import (RolloutQueue, Trajectory, is_stale, split_stale,
+                             ticket_queue)
+from repro.rl.weights import PolicyStore
+
+__all__ = [
+    "ActorFleet", "RolloutActor", "default_reward",
+    "InjectedLearnerFailure", "RLLearner", "RLLearnerSpec", "RLRunReport",
+    "RolloutQueue", "Trajectory", "is_stale", "split_stale", "ticket_queue",
+    "PolicyStore",
+]

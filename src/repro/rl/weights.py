@@ -1,0 +1,68 @@
+"""Versioned policy weight broadcast through the (federated) store.
+
+The learner *publishes* — it never talks to an actor.  Each publish is
+one committed version under ``<prefix>/policy``; actors *poll* the
+latest version between rollout waves and pull-on-bump.  Both halves are
+a thin veneer over ``repro.checkpoint.Checkpointer`` (version == step),
+which already provides the properties a weight broadcast needs:
+
+  * **atomic commit** — per-leaf shards first, manifest last, so a
+    reader never observes a half-published version;
+  * **store agnosticism** — any ``BlobCodecs`` store works: a plain
+    ``ObjectStore`` on one host, or a ``FederatedStore`` site view, in
+    which case a publisher at the learner's site and fetchers holding
+    *their own site's* view turn every pull into a metered (and
+    tenant-billed) cross-link replication — the content-addressed
+    broadcast of the RLJob design;
+  * **GC** — ``keep`` bounds live versions; a reader that loses the GC
+    race retries on whatever is newest (``restore_latest`` semantics).
+
+Version numbers are dense ints starting at 0 (the actors' initial
+weights, seeded identically from the job seed, count as version 0 and
+are never published).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.checkpoint.checkpoint import Checkpointer
+
+
+class PolicyStore:
+    """Publish/fetch versioned policy params over a BlobCodecs store."""
+
+    def __init__(self, store, *, prefix: str = "policy", keep: int = 3,
+                 registry=None):
+        self.ckpt = Checkpointer(store, prefix=prefix, keep=keep)
+        self.metrics = registry
+
+    # --------------------------------------------------------------- learner
+    def publish(self, version: int, params: Any, *, step: int = 0) -> None:
+        """Commit one new weight version (atomic: manifest lands last)."""
+        # NB: restore_latest merges ``extra`` over {"step": version}, so
+        # the learner step rides under its own key
+        self.ckpt.save(version, {"params": params},
+                       extra={"learner_step": step})
+        if self.metrics is not None:
+            self.metrics.inc("rl/weights_published")
+            self.metrics.gauge("rl/policy_version", version)
+
+    # ---------------------------------------------------------------- actors
+    def latest_version(self) -> int:
+        """Newest committed version, or -1 when nothing was published."""
+        v = self.ckpt.latest_step()
+        return -1 if v is None else v
+
+    def fetch(self, abstract_params: Any, shardings: Optional[Any] = None):
+        """Pull the newest committed version -> (params, version).
+
+        Returns (None, -1) when nothing was published yet.  Fetching
+        through a FederatedStore site view replicates the shards to the
+        caller's site — the metered broadcast hop."""
+        restored, meta = self.ckpt.restore_latest(
+            {"params": abstract_params}, shardings)
+        if restored is None:
+            return None, -1
+        if self.metrics is not None:
+            self.metrics.inc("rl/weight_syncs")
+        return restored["params"], int(meta["step"])

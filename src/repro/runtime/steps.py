@@ -132,7 +132,8 @@ class _TrainPieces:
 
 def _train_pieces(cfg: ModelConfig, par: ParallelConfig,
                   ocfg: OptimizerConfig, mesh: Mesh,
-                  shape: ShapeConfig) -> _TrainPieces:
+                  shape: ShapeConfig, *, loss_attr: str = "loss_fn",
+                  batch_fn: Optional[Callable] = None) -> _TrainPieces:
     cfg = resolve_cfg(cfg, shape)
     accum = max(ocfg.accum_steps, 1)
     if shape.global_batch % accum:
@@ -156,12 +157,16 @@ def _train_pieces(cfg: ModelConfig, par: ParallelConfig,
     abstract_opt = pr.abstract_params(opt_schema, "float32")
     param_shd = sh.shardings_for_schema(schema, mesh, rules)
     opt_shd = sh.shardings_for_schema(opt_schema, mesh, rules)
-    batch_abs, batch_axes = batch_specs(cfg, shape)
+    batch_abs, batch_axes = (batch_fn or batch_specs)(cfg, shape)
     batch_shd = _shardings(batch_abs, batch_axes, mesh, rules)
+    loss_impl = getattr(mod, loss_attr, None)
+    if loss_impl is None:
+        raise ValueError(
+            f"model family {cfg.family!r} does not define {loss_attr!r}")
 
     def train_step(params, opt_state, batch):
         def loss_of(p, b):
-            return mod.loss_fn(ctx, p, b)
+            return loss_impl(ctx, p, b)
 
         if accum == 1:
             loss, grads = jax.value_and_grad(loss_of)(params, batch)
@@ -255,8 +260,16 @@ def build_train_chunk(cfg: ModelConfig, par: ParallelConfig,
     independent of ``device_steps`` (and bit-identical to per-step
     dispatch — the scan body IS the per-step ``train_step``).
     """
-    K = max(device_steps, 1)
     tp = _train_pieces(cfg, par, ocfg, mesh, shape)
+    return _chunk_bundle(tp, device_steps)
+
+
+def _chunk_bundle(tp: _TrainPieces, device_steps: int) -> StepBundle:
+    """Wrap a per-step ``train_step`` into one K-step lax.scan dispatch —
+    shared by the supervised and RL chunk builders, so the RL learner
+    rides the identical device-resident hot loop."""
+    K = max(device_steps, 1)
+    mesh = tp.mesh
     chunk_abs, chunk_axes = chunk_batch_specs(tp.batch_abs, tp.batch_axes, K)
     chunk_shd = _shardings(chunk_abs, chunk_axes, mesh, tp.rules)
 
@@ -283,6 +296,37 @@ def build_train_chunk(cfg: ModelConfig, par: ParallelConfig,
         accum_steps=tp.accum,
         device_steps=K,
     )
+
+
+# ---------------------------------------------------------------------------
+# RL policy-gradient train step (repro.rl learner)
+# ---------------------------------------------------------------------------
+
+def rl_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(abstract, axes) for one batch of rollout trajectories: the LM
+    batch plus a per-token action mask and a per-trajectory advantage."""
+    B, S = shape.global_batch, token_len(cfg, shape)
+    abstract = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+                "advantages": jax.ShapeDtypeStruct((B,), jnp.float32)}
+    axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+            "mask": ("batch", "seq"), "advantages": ("batch",)}
+    return abstract, axes
+
+
+def build_rl_train_chunk(cfg: ModelConfig, par: ParallelConfig,
+                         ocfg: OptimizerConfig, mesh: Mesh,
+                         shape: ShapeConfig, device_steps: int) -> StepBundle:
+    """The RL learner's fused dispatch: ``device_steps`` advantage-weighted
+    policy-gradient optimizer steps in one ``lax.scan``, (params, opt)
+    carry donated and device-resident — structurally identical to
+    ``build_train_chunk`` (same AdamW update, same donation, same (K,)
+    stacked metrics), differing only in the loss (``mod.rl_loss_fn``)
+    and the batch schema (``rl_batch_specs``: + mask, + advantages)."""
+    tp = _train_pieces(cfg, par, ocfg, mesh, shape,
+                       loss_attr="rl_loss_fn", batch_fn=rl_batch_specs)
+    return _chunk_bundle(tp, device_steps)
 
 
 # ---------------------------------------------------------------------------

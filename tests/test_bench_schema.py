@@ -117,6 +117,33 @@ def test_workflow_bench_is_committed():
     assert conc["fanout_ratio"] < 0.6
 
 
+def test_rl_bench_is_committed():
+    """ISSUE 10 acceptance: BENCH_rl.json carries the actor-fleet /
+    learner co-tenant run with its chaos accounting — rollout tok/s,
+    learner steps/s, p99 policy lag inside the staleness bound, and
+    steps_lost <= ckpt_every under one actor kill + one learner
+    preemption + one injected learner crash."""
+    path = ROOT / "BENCH_rl.json"
+    assert path.exists(), "BENCH_rl.json must be committed"
+    doc = json.loads(path.read_text())
+    rows = {r["name"]: r for r in doc["rows"]}
+    fleet = rows["rl_rollout_fleet"]
+    learner = rows["rl_learner_steps"]
+    chaos = rows["rl_chaos_recovery"]
+    assert fleet["rollout_tok_s"] > 0 and fleet["trained"] > 0
+    assert fleet["bytes_moved"] > 0          # metered federated weight pulls
+    assert learner["learner_steps_s"] > 0
+    assert learner["weight_syncs"] >= 1
+    # the staleness contract: nothing trained-on beyond max_policy_lag=2
+    assert learner["max_lag_trained"] <= 2
+    assert learner["policy_lag_p99"] <= 2
+    # chaos recovery: crash resume bounded by the checkpoint cadence (2),
+    # and the killed actor's ticket leases were requeued, not lost
+    assert chaos["preemptions"] >= 1 and chaos["crashes"] >= 1
+    assert chaos["steps_lost"] <= 2
+    assert chaos["requeued_tickets"] >= 1
+
+
 @pytest.mark.parametrize("path", committed_bench_files(),
                          ids=lambda p: p.name)
 def test_committed_bench_json_validates(path):

@@ -115,3 +115,28 @@ def test_double_ack_idempotent():
     tid, _ = q.lease("w")
     assert q.ack(tid, "w") is True
     assert q.ack(tid, "w") is False
+
+
+# --------------------------------------------------------------------------
+# enqueued_at preservation under churn: snapshot/restore must carry the
+# ORIGINAL submission stamps — a requeued attempt never resets the clock
+# (the RL rollout queue and the serving router's TTFT accounting both
+# rely on this; the deterministic nack/lease-expiry cases live in
+# tests/test_rl.py so they run without hypothesis installed).
+
+@settings(max_examples=30, deadline=None)
+@given(stamps=st.lists(st.floats(min_value=0.0, max_value=1e6,
+                                 allow_nan=False), min_size=1, max_size=10))
+def test_snapshot_restore_preserves_enqueued_at(stamps):
+    clock = FakeClock()
+    q = WorkQueue(lease_timeout=5.0, clock=clock)
+    tids = []
+    for s in stamps:
+        tids.append(q.put("x", enqueued_at=s))
+    # churn: lease + nack half of them so requeue order differs
+    for _ in range(len(tids) // 2):
+        g = q.lease("w")
+        q.nack(g[0], "w")
+    q2 = WorkQueue.restore(q.snapshot(), clock=clock)
+    for tid, s in zip(tids, stamps):
+        assert q2.enqueued_at(tid) == s
